@@ -1,0 +1,49 @@
+"""Fig. 16 (training curves), Fig. 17 (DSA / QoS-reward ablation), Fig. 18
+(generation-score & output-length predictor ablation)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from repro.core import routers
+from repro.env import env as env_lib
+
+
+def run(n_steps: int = 3000) -> None:
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+
+    # --- Fig. 16: training curves from saved histories ---
+    for variant in ("qos", "baseline", "dsa_only"):
+        hist = os.path.join(common.ROUTER_DIR, f"{variant}_history.json")
+        if os.path.exists(hist):
+            rows = json.load(open(hist))
+            for row in rows[:: max(1, len(rows) // 12)]:
+                common.emit(
+                    f"fig16/{variant}/it{row['iteration']}", 0.0,
+                    f"reward={row['collect_reward']:.4f};"
+                    f"entropy={row['entropy']:.3f}")
+
+    # --- Fig. 17: DSA + QoS-aware-reward ablation ---
+    for variant, label in (("baseline", "BaselineRL"),
+                           ("dsa_only", "BaselineRL+DSA"),
+                           ("qos", "QoS-aware-RL(ours)")):
+        sac_cfg, params = common.load_router(variant, env_cfg, pool=pool)
+        pol = routers.sac_policy(label, sac_cfg, params)
+        m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+        common.emit(f"fig17/{label}", m["wall_s"] / n_steps * 1e6,
+                    common.fmt_metrics(m))
+
+    # --- Fig. 18: predictor ablations (PS/ZS x PL/ZL) ---
+    for variant, label in (("qos", "PS+PL"), ("zs_pl", "ZS+PL"),
+                           ("ps_zl", "PS+ZL"), ("zs_zl", "ZS+ZL")):
+        sac_cfg, params = common.load_router(variant, env_cfg, pool=pool)
+        pol = routers.sac_policy(label, sac_cfg, params)
+        m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+        common.emit(f"fig18/{label}", m["wall_s"] / n_steps * 1e6,
+                    common.fmt_metrics(m))
+
+
+if __name__ == "__main__":
+    run()

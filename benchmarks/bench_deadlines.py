@@ -1,0 +1,23 @@
+"""Fig. 13 — QoS / latency across latency requirements L (20..50 ms).
+
+Note: QoS-RL's reward (and the impact estimator) consumes L, so its
+behavior adapts across L even when trained at 30 ms — the paper's claim."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.env import env as env_lib
+
+
+def run(n_steps: int = 3000) -> None:
+    for L in (0.020, 0.030, 0.040, 0.050):
+        env_cfg = env_lib.EnvConfig(latency_L=L)
+        pool = env_lib.make_env_pool(env_cfg)
+        for pol in common.policy_zoo(env_cfg, pool):
+            m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+            us = m["wall_s"] / n_steps * 1e6
+            common.emit(f"fig13_L{int(L*1e3)}ms/{pol.name}", us,
+                        common.fmt_metrics(m))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Fig. 10 (end-to-end latency decomposition) + Table II (component
+profile: parameter counts and measured routing latency)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import features, han as han_lib, predictors, sac as sac_lib
+from repro.env import env as env_lib
+
+
+def run(n_steps: int = 3000) -> None:
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+
+    # --- Table II: component parameter counts ---
+    sac_cfg, params = common.load_router("qos", env_cfg, pool=pool)
+    pcfg = predictors.PredictorConfig()
+    pred_params = predictors.init_params(jax.random.PRNGKey(0), pcfg,
+                                         pool.n_experts)
+    n_pred = sum(int(x.size) for x in jax.tree_util.tree_leaves(pred_params))
+    n_han = han_lib.count_params(params["han"]) if "han" in params else 0
+    n_ac = sum(han_lib.count_params(params[k]) for k in ("actor", "q1", "q2"))
+    common.emit("table2/score_predictor_params", 0.0, n_pred)
+    common.emit("table2/length_predictor_params", 0.0, n_pred)
+    common.emit("table2/han_params", 0.0, n_han)
+    common.emit("table2/actor_critic_params", 0.0, n_ac)
+
+    # --- Table II: routing latency (jitted act on one observation) ---
+    state = env_lib.reset(env_cfg, pool, jax.random.PRNGKey(0))
+    obs = features.build_obs(env_cfg, pool, state)
+    act = jax.jit(lambda o, k: sac_lib.act(params, sac_cfg, o, k, greedy=True))
+    key = jax.random.PRNGKey(1)
+    act(obs, key).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    reps = 200
+    for _ in range(reps):
+        a = act(obs, key)
+    a.block_until_ready()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    common.emit("table2/routing_latency", us, f"{us/1000:.3f}ms_per_decision")
+
+    # --- Fig. 10: e2e latency decomposition per policy ---
+    comm_ms = 0.3  # <1ms at 1 Mbps for text payloads (paper's setting)
+    for pol in common.policy_zoo(env_cfg, pool):
+        m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+        wait_ms = m["avg_wait"] * 1e3
+        total_tok_ms = m["avg_latency_per_token"] * 1e3
+        common.emit(
+            f"fig10/{pol.name}", us if "ours" in pol.name else 0.0,
+            f"comm_ms={comm_ms};routing_ms={us/1000 if 'ours' in pol.name else 0.01:.3f};"
+            f"wait_ms={wait_ms:.2f};lat_per_tok_ms={total_tok_ms:.2f}")
+
+
+if __name__ == "__main__":
+    run()

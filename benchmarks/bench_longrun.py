@@ -1,0 +1,49 @@
+"""Fig. 14/15 — long-running process: windowed average QoS and GPU memory
+utilization over time under real-world workloads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import features
+from repro.env import engine, env as env_lib
+from repro.env.workload import WorkloadConfig
+
+
+def run(n_windows: int = 10, window_steps: int = 800) -> None:
+    env_cfg = env_lib.EnvConfig(workload=WorkloadConfig(kind="realworld"))
+    pool = env_lib.make_env_pool(env_cfg)
+    for pol in common.policy_zoo(env_cfg, pool):
+        key = jax.random.PRNGKey(7)
+        state = env_lib.reset(env_cfg, pool, key)
+        pstate = pol.init_state(key)
+
+        @jax.jit
+        def window(state, pstate, key):
+            def body(carry, _):
+                state, pstate, key = carry
+                key, k = jax.random.split(key)
+                obs = features.build_obs(env_cfg, pool, state)
+                a, pstate = pol.act(pstate, state, obs, k)
+                state, r, info = env_lib.step(env_cfg, pool, state, a)
+                mem = jnp.mean(engine.mem_used(
+                    state["queues"], pool.mem_per_token) / pool.mem_capacity)
+                return (state, pstate, key), (r, mem)
+            (state, pstate, key), (rews, mems) = jax.lax.scan(
+                body, (state, pstate, key), None, length=window_steps)
+            return state, pstate, key, jnp.mean(rews), jnp.mean(mems)
+
+        prev_done = prev_phi = 0.0
+        for w in range(n_windows):
+            state, pstate, key, rew, mem = window(state, pstate, key)
+            s = state["stats"]
+            done, phi = float(s["done"]), float(s["phi"])
+            dq = (phi - prev_phi) / max(done - prev_done, 1.0)
+            prev_done, prev_phi = done, phi
+            common.emit(f"fig14_15/{pol.name}/window{w}", 0.0,
+                        f"window_qos={dq:.4f};gpu_util={float(mem):.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""§V-B1 predictor quality table: top-1/top-3 bucket accuracy for the
+generation-score and output-length predictors (paper: 63.4/97.8 and
+73.0/84.7)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import predictors
+from repro.env import env as env_lib
+
+
+def run(steps: int = 600) -> None:
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+    pcfg = predictors.PredictorConfig()
+    t0 = time.time()
+    params, m = predictors.train(pcfg, pool, steps=steps, log_fn=None)
+    dt = time.time() - t0
+    common.emit("predictors/score", dt / steps * 1e6,
+                f"top1={m['score_top1']:.4f};top3={m['score_top3']:.4f}")
+    common.emit("predictors/length", dt / steps * 1e6,
+                f"top1={m['len_top1']:.4f};top3={m['len_top3']:.4f}")
+    common.emit("predictors/params", 0.0, m["n_params"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig. 12 — QoS / latency across request arrival rates λ (the router is
+trained at λ=5 and evaluated across rates, as in the paper)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.env import env as env_lib
+from repro.env.workload import WorkloadConfig
+
+
+def run(n_steps: int = 3000) -> None:
+    for lam in (3.0, 5.0, 7.0, 9.0):
+        env_cfg = env_lib.EnvConfig(workload=WorkloadConfig(rate=lam))
+        pool = env_lib.make_env_pool(env_cfg)
+        for pol in common.policy_zoo(env_cfg, pool):
+            m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+            us = m["wall_s"] / n_steps * 1e6
+            common.emit(f"fig12_lam{lam:g}/{pol.name}", us,
+                        common.fmt_metrics(m))
+
+
+if __name__ == "__main__":
+    run()

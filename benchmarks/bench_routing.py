@@ -1,0 +1,23 @@
+"""Fig. 7 (Poisson) and Fig. 9 (real-world/BurstGPT-like) — average QoS and
+average latency per token for all policies, N=6, λ=5."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.env import env as env_lib
+from repro.env.workload import WorkloadConfig
+
+
+def run(n_steps: int = 4000) -> None:
+    for fig, kind in (("fig7_poisson", "poisson"), ("fig9_realworld", "realworld")):
+        env_cfg = env_lib.EnvConfig(workload=WorkloadConfig(kind=kind))
+        pool = env_lib.make_env_pool(env_cfg)
+        for pol in common.policy_zoo(env_cfg, pool):
+            m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+            us = m["wall_s"] / n_steps * 1e6
+            common.emit(f"{fig}/{pol.name}", us, common.fmt_metrics(m))
+
+
+if __name__ == "__main__":
+    run()

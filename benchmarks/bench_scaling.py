@@ -1,0 +1,28 @@
+"""Fig. 11 — QoS / latency across the number of edge experts N (3..12).
+
+RL policies are trained at N=6 (paper trains per setting; our default
+harness reuses the N=6 policy only where shapes match, so RL rows appear
+for N=6 and heuristics cover the sweep — pass --train-per-n for the full
+paper protocol)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+from repro.env import env as env_lib
+
+
+def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
+    for n in (3, 6, 9, 12):
+        env_cfg = env_lib.EnvConfig(n_experts=n)
+        pool = env_lib.make_env_pool(env_cfg)
+        include_rl = (n == 6) or train_per_n
+        pols = common.policy_zoo(env_cfg, pool, include_rl=include_rl)
+        for pol in pols:
+            m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+            us = m["wall_s"] / n_steps * 1e6
+            common.emit(f"fig11_N{n}/{pol.name}", us, common.fmt_metrics(m))
+
+
+if __name__ == "__main__":
+    run(train_per_n="--train-per-n" in sys.argv)

@@ -1,0 +1,74 @@
+"""Shared benchmark helpers: policy zoo construction + CSV emission."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import io, routers, sac as sac_lib, training  # noqa: E402
+from repro.env import env as env_lib  # noqa: E402
+
+ROUTER_DIR = os.environ.get("REPRO_ROUTER_DIR", "experiments/routers")
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def load_router(variant: str, env_cfg, *, quick_iters: int = 80,
+                pool=None) -> Tuple[sac_lib.SACConfig, dict]:
+    """Load a trained router checkpoint, or quick-train a weak one."""
+    use_han = variant != "baseline"
+    sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1,
+                                use_han=use_han,
+                                flat_dim=env_cfg.n_experts * 3)
+    path = os.path.join(ROUTER_DIR, f"{variant}.npz")
+    if os.path.exists(path):
+        return sac_cfg, io.load_pytree(path)
+    print(f"# [bench] {path} missing -> quick-training {quick_iters} iters "
+          f"(results will understate the trained router)", file=sys.stderr)
+    tc = training.TrainConfig(
+        iterations=quick_iters, log_every=10_000,
+        qos_reward=variant not in ("baseline", "dsa_only"),
+        zero_score_pred=variant in ("zs_pl", "zs_zl"),
+        zero_len_pred=variant in ("ps_zl", "zs_zl"))
+    params, _ = training.train_router(env_cfg, sac_cfg, tc, pool=pool,
+                                      log_fn=None)
+    return sac_cfg, params
+
+
+def policy_zoo(env_cfg, pool, *, include_rl: bool = True,
+               rl_variants=("qos", "baseline")) -> List:
+    pols = [
+        routers.bert_router(),
+        routers.round_robin(env_cfg.n_experts),
+        routers.shortest_queue(env_cfg.n_experts),
+        routers.quality_least_loaded(),  # beyond-paper heuristic
+    ]
+    if include_rl:
+        for v in rl_variants:
+            sac_cfg, params = load_router(v, env_cfg, pool=pool)
+            label = {"qos": "QoS-RL(ours)", "baseline": "BaselineRL",
+                     "dsa_only": "BaselineRL+DSA"}.get(v, v)
+            pols.append(routers.sac_policy(label, sac_cfg, params))
+    return pols
+
+
+def eval_policy(env_cfg, pool, policy, *, n_steps: int, n_envs: int = 2,
+                seed: int = 1234) -> Dict[str, float]:
+    t0 = time.time()
+    m = training.evaluate(env_cfg, pool, policy, n_steps=n_steps,
+                          n_envs=n_envs, seed=seed)
+    m["wall_s"] = time.time() - t0
+    return m
+
+
+def fmt_metrics(m: Dict[str, float]) -> str:
+    return (f"qos={m['avg_qos']:.4f};lat_ms={m['avg_latency_per_token']*1e3:.2f};"
+            f"viol={m['violation_rate']:.3f};done={m['completed']:.0f};"
+            f"drop={m['dropped']:.0f}")

@@ -1,0 +1,112 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/**.json (produced by repro.launch.dryrun), derives
+the three roofline terms per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_dev / peak_FLOPs
+  memory     = HLO_bytes_per_dev / HBM_bw
+  collective = collective_wire_bytes_per_dev / ICI_bw
+
+plus MODEL_FLOPS (6·N·D train / 2·N_active·D per serve token), the
+useful-compute ratio, the dominant term, and a one-line "what would move
+it" note.  Emits CSV + writes a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def advice(dominant: str, arch: str, shape: str) -> str:
+    if dominant == "collective":
+        return "reduce FSDP regather (fewer microbatches / ZeRO boundary) or overlap all-gathers"
+    if dominant == "memory":
+        return "KV/activation dtype + larger per-step arithmetic intensity (batch or fused kernels)"
+    return "MXU-align tiles; shave remat recompute"
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    h = rec["hlo_totals"]
+    n_dev = rec["n_devices"]
+    t_comp = h["flops"] / PEAK_FLOPS_BF16
+    t_mem = h["memory_bytes"] / HBM_BW
+    t_coll = h["collective_wire_bytes"] / ICI_BW
+    mf = model_flops_per_device(rec["arch"], rec["shape"], n_dev)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    ideal = mf / PEAK_FLOPS_BF16
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / max(h["flops"], 1.0),
+        "roofline_fraction": ideal / max(bound, 1e-12),
+        "hbm_args_gb": (rec["memory"]["argument_bytes"] or 0) / 1e9,
+        "hbm_temp_gb": (rec["memory"]["temp_bytes"] or 0) / 1e9,
+        "advice": advice(dominant, rec["arch"], rec["shape"]),
+    }
+
+
+def run(dryrun_dir: str = "experiments/dryrun", write_md: str = "") -> list:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "**", "*.json"),
+                               recursive=True)):
+        rec = json.load(open(fn))
+        row = analyze_record(rec)
+        if row is None:
+            print(f"roofline/{rec.get('arch')}/{rec.get('shape')}"
+                  f"/{rec.get('mesh')},0.0,FAILED:{rec.get('error', '?')[:80]}")
+            continue
+        rows.append(row)
+        print(f"roofline/{row['arch']}/{row['shape']}/{row['mesh']},0.0,"
+              f"dom={row['dominant']};frac={row['roofline_fraction']:.3f};"
+              f"tc={row['t_compute_s']:.4f};tm={row['t_memory_s']:.4f};"
+              f"tx={row['t_collective_s']:.4f};"
+              f"useful={row['useful_flops_ratio']:.2f}")
+    if write_md and rows:
+        with open(write_md, "w") as f:
+            f.write("| arch | shape | mesh | compute s | memory s | "
+                    "collective s | dominant | MODEL/HLO | roofline frac | "
+                    "HBM args+temp GB/dev | next lever |\n")
+            f.write("|---|---|---|---|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                    f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+                    f"| {r['t_collective_s']:.4f} | **{r['dominant']}** "
+                    f"| {r['useful_flops_ratio']:.2f} "
+                    f"| {r['roofline_fraction']:.3f} "
+                    f"| {r['hbm_args_gb']:.1f}+{r['hbm_temp_gb']:.1f} "
+                    f"| {r['advice']} |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run(write_md="experiments/roofline_table.md")

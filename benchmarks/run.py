@@ -1,0 +1,70 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,roofline]
+
+Emits ``name,us_per_call,derived`` CSV on stdout.  Sections:
+  fig7/fig9    routing comparison (Poisson / real-world)      bench_routing
+  fig10/table2 e2e latency decomposition + component profile  bench_latency
+  fig11        number-of-experts sweep                        bench_scaling
+  fig12        arrival-rate sweep                             bench_rates
+  fig13        latency-requirement sweep                      bench_deadlines
+  fig14/15     long-run QoS + GPU utilization                 bench_longrun
+  fig16/17/18  training curves + ablations                    bench_ablation
+  predictors   score/length bucket predictor accuracy         bench_predictors
+  roofline     dry-run roofline terms (reads experiments/)    roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="shorter eval episodes (CI-sized)")
+    p.add_argument("--only", default="",
+                   help="comma-separated section filter")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    steps = 1200 if args.quick else 4000
+    steps_s = 800 if args.quick else 3000
+
+    def want(*names):
+        return only is None or any(n in only for n in names)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if want("fig7", "fig9", "routing"):
+        from benchmarks import bench_routing
+        bench_routing.run(n_steps=steps)
+    if want("fig10", "table2", "latency"):
+        from benchmarks import bench_latency
+        bench_latency.run(n_steps=steps_s)
+    if want("fig11", "scaling"):
+        from benchmarks import bench_scaling
+        bench_scaling.run(n_steps=steps_s)
+    if want("fig12", "rates"):
+        from benchmarks import bench_rates
+        bench_rates.run(n_steps=steps_s)
+    if want("fig13", "deadlines"):
+        from benchmarks import bench_deadlines
+        bench_deadlines.run(n_steps=steps_s)
+    if want("fig14", "fig15", "longrun"):
+        from benchmarks import bench_longrun
+        bench_longrun.run(n_windows=6 if args.quick else 10)
+    if want("fig16", "fig17", "fig18", "ablation"):
+        from benchmarks import bench_ablation
+        bench_ablation.run(n_steps=steps_s)
+    if want("predictors"):
+        from benchmarks import bench_predictors
+        bench_predictors.run(steps=300 if args.quick else 600)
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run(write_md="experiments/roofline_table.md")
+    print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Edge routing demo (paper Fig. 7 in miniature): compare all routing
+policies on the Poisson workload; loads the trained QoS router if present,
+otherwise quick-trains one.
+
+    PYTHONPATH=src python examples/edge_routing_demo.py [--steps 4000]
+"""
+import argparse
+import os
+
+import jax
+
+from repro.core import io, routers, sac as sac_lib, training
+from repro.env import env as env_lib
+
+
+def load_or_train(env_cfg, pool, path="experiments/routers/qos.npz",
+                  quick_iters=150):
+    sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1)
+    if os.path.exists(path):
+        print(f"[demo] loading trained router from {path}")
+        params = io.load_pytree(path)
+        return sac_cfg, params
+    print(f"[demo] no checkpoint at {path}; quick-training "
+          f"{quick_iters} iterations (expect weaker results)")
+    tc = training.TrainConfig(iterations=quick_iters, log_every=50)
+    params, _ = training.train_router(env_cfg, sac_cfg, tc, pool=pool,
+                                      log_fn=lambda m: print("  ", m))
+    return sac_cfg, params
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=4000)
+    p.add_argument("--workload", default="poisson",
+                   choices=["poisson", "realworld"])
+    args = p.parse_args()
+
+    import dataclasses
+    from repro.env.workload import WorkloadConfig
+    env_cfg = env_lib.EnvConfig(
+        workload=WorkloadConfig(kind=args.workload))
+    pool = env_lib.make_env_pool(env_cfg)
+    sac_cfg, params = load_or_train(env_cfg, pool)
+
+    policies = [
+        routers.round_robin(env_cfg.n_experts),
+        routers.shortest_queue(env_cfg.n_experts),
+        routers.bert_router(),
+        routers.sac_policy("QoS-RL (ours)", sac_cfg, params),
+    ]
+    print(f"\n{'policy':>16s} {'avg QoS':>8s} {'lat/tok':>9s} "
+          f"{'viol':>6s} {'done':>6s} {'drop':>6s}")
+    for pol in policies:
+        m = training.evaluate(env_cfg, pool, pol, n_steps=args.steps, n_envs=2)
+        print(f"{pol.name:>16s} {m['avg_qos']:8.4f} "
+              f"{m['avg_latency_per_token']*1e3:7.2f}ms "
+              f"{m['violation_rate']:6.3f} {m['completed']:6.0f} "
+              f"{m['dropped']:6.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Train the paper's QoS-aware DRL router (or its ablations) and evaluate.
+
+    PYTHONPATH=src python examples/train_router.py --variant qos --iters 300
+
+Variants: qos (full), baseline (Baseline RL), dsa_only (DSA without
+QoS-aware reward), zs_pl / ps_zl / zs_zl (predictor ablations, Fig. 18).
+"""
+import argparse
+import json
+import os
+
+from repro.core import io, routers, sac as sac_lib, training
+from repro.env import env as env_lib
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--variant", default="qos",
+                   choices=["qos", "baseline", "dsa_only",
+                            "zs_pl", "ps_zl", "zs_zl"])
+    p.add_argument("--iters", type=int, default=300)
+    p.add_argument("--out", default="experiments/routers")
+    args = p.parse_args()
+
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+    use_han = args.variant != "baseline"
+    qos_reward = args.variant not in ("baseline", "dsa_only")
+    sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1,
+                                use_han=use_han,
+                                flat_dim=env_cfg.n_experts * 3)
+    tc = training.TrainConfig(
+        iterations=args.iters, qos_reward=qos_reward,
+        zero_score_pred=args.variant in ("zs_pl", "zs_zl"),
+        zero_len_pred=args.variant in ("ps_zl", "zs_zl"),
+        log_every=25)
+    params, history = training.train_router(
+        env_cfg, sac_cfg, tc, pool=pool,
+        log_fn=lambda m: print(f"  it={m['iteration']} "
+                               f"rew={m['collect_reward']:.3f}"))
+    pol = routers.sac_policy(args.variant, sac_cfg, params)
+    metrics = training.evaluate(env_cfg, pool, pol, n_steps=4000, n_envs=2)
+    print(f"[{args.variant}]", {k: round(v, 4) for k, v in metrics.items()})
+    os.makedirs(args.out, exist_ok=True)
+    io.save_pytree(os.path.join(args.out, f"{args.variant}.npz"), params)
+    with open(os.path.join(args.out, f"{args.variant}_eval.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

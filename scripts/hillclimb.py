@@ -1,0 +1,70 @@
+"""Perf hillclimbing harness: re-lower one (arch x shape) cell under config
+overrides and record the roofline terms per variant.
+
+    PYTHONPATH=src python scripts/hillclimb.py <cell> <variant>
+
+Cells/variants are defined in VARIANTS below; results land in
+experiments/perf/<arch>__<shape>__<variant>.json.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+# cell -> variant -> overrides
+VARIANTS = {
+    # v0 baseline = the sweep JSON (pre-optimization code)
+    "rwkv6-7b/train_4k": {
+        "v1_carry_constraints": {"rwkv_d_dtype": "float32", "rwkv_chunk": 32},
+        "v2_bf16D": {"rwkv_d_dtype": "compute", "rwkv_chunk": 32},
+        "v3_bf16D_chunk16": {"rwkv_d_dtype": "compute", "rwkv_chunk": 16},
+        "v4_bf16D_chunk64": {"rwkv_d_dtype": "compute", "rwkv_chunk": 64},
+        "v5_bf16D_chunk8": {"rwkv_d_dtype": "compute", "rwkv_chunk": 8},
+    },
+    "kimi-k2-1t-a32b/train_4k": {
+        "v0_base_M8": {},
+        "v1_M4": {"microbatches": 4},
+        "v2_M4_bf16psum": {"microbatches": 4, "moe_psum_dtype": "bfloat16"},
+        "v3_M2_bf16psum": {"microbatches": 2, "moe_psum_dtype": "bfloat16"},
+    },
+    "chameleon-34b/train_4k": {
+        "v1_seq_parallel": {"seq_parallel": True},
+    },
+    "chameleon-34b/prefill_32k": {
+        "v0_base_bq512": {},
+        "v1_bq1024_bkv2048": {"attn_block_q": 1024, "attn_block_kv": 2048},
+        "v2_bq2048_bkv4096": {"attn_block_q": 2048, "attn_block_kv": 4096},
+        "v3_seq_parallel": {"seq_parallel": True},
+        "v4_seqpar_bq1024": {"seq_parallel": True, "attn_block_q": 1024, "attn_block_kv": 2048},
+    },
+}
+
+
+def main() -> None:
+    cell = sys.argv[1]
+    variant = sys.argv[2]
+    arch, shape = cell.split("/")
+    overrides = VARIANTS[cell][variant]
+    out_dir = "experiments/perf"
+    rec = run_cell(arch, shape, multi_pod=False, out_dir="",
+                   overrides=overrides)
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir,
+                      f"{arch.replace('.', '_')}__{shape}__{variant}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    h = rec.get("hlo_totals", {})
+    print(f"[hillclimb] {cell} {variant}: ok={rec['ok']} "
+          f"flops={h.get('flops', 0):.3e} mem={h.get('memory_bytes', 0):.3e} "
+          f"coll={h.get('collective_wire_bytes', 0):.3e} "
+          f"temp={rec.get('memory', {}).get('temp_bytes', 0) / 1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

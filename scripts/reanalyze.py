@@ -1,0 +1,39 @@
+"""Re-run the HLO cost analysis over stored .hlo.gz artifacts (no
+recompiles) and refresh hlo_totals in the dry-run JSONs.
+
+    PYTHONPATH=src python scripts/reanalyze.py [experiments/dryrun]
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_analysis  # noqa: E402
+
+
+def main(root: str = "experiments/dryrun") -> None:
+    n = 0
+    for gz in sorted(glob.glob(os.path.join(root, "**", "*.hlo.gz"),
+                               recursive=True)):
+        js = gz[:-len(".hlo.gz")] + ".json"
+        if not os.path.exists(js):
+            continue
+        with gzip.open(gz, "rt") as f:
+            txt = f.read()
+        totals = hlo_analysis.analyze(txt)
+        rec = json.load(open(js))
+        rec["hlo_totals"] = totals.as_dict()
+        with open(js, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"reanalyzed {js}: flops={totals.flops:.3e} "
+              f"mem={totals.memory_bytes:.3e} "
+              f"coll={totals.collective_wire_bytes:.3e}")
+    print(f"done: {n} records")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

@@ -1,0 +1,48 @@
+"""Build the §Reproduction summary table from router eval JSONs +
+heuristic evaluations under the final environment.
+
+    PYTHONPATH=src python scripts/repro_summary.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core import io, routers, sac as sac_lib, training  # noqa: E402
+from repro.env import env as env_lib  # noqa: E402
+
+env_cfg = env_lib.EnvConfig()
+pool = env_lib.make_env_pool(env_cfg)
+
+rows = []
+for pol in (routers.bert_router(), routers.round_robin(env_cfg.n_experts),
+            routers.shortest_queue(env_cfg.n_experts),
+            routers.quality_least_loaded()):
+    m = training.evaluate(env_cfg, pool, pol, n_steps=5000, n_envs=4)
+    rows.append((pol.name, m))
+
+for variant in ("baseline", "dsa_only", "qos", "qos_plus"):
+    path = f"experiments/routers/{variant}.npz"
+    if not os.path.exists(path):
+        continue
+    use_han = variant != "baseline"
+    sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1,
+                                use_han=use_han,
+                                flat_dim=env_cfg.n_experts * 3)
+    params = io.load_pytree(path)
+    pol = routers.sac_policy(variant, sac_cfg, params)
+    m = training.evaluate(env_cfg, pool, pol, n_steps=5000, n_envs=4)
+    rows.append((variant, m))
+
+print("| policy | avg QoS | lat/tok ms | viol | done | dropped |")
+print("|---|---|---|---|---|---|")
+for name, m in rows:
+    print(f"| {name} | {m['avg_qos']:.4f} | "
+          f"{m['avg_latency_per_token']*1e3:.2f} | "
+          f"{m['violation_rate']:.3f} | {m['completed']:.0f} | "
+          f"{m['dropped']:.0f} |")
+with open("experiments/repro_summary.json", "w") as f:
+    json.dump({n: m for n, m in rows}, f, indent=1)

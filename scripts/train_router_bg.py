@@ -1,0 +1,56 @@
+"""Background router training: QoS-aware RL + Baseline RL (+ ablations).
+
+Usage: PYTHONPATH=src python scripts/train_router_bg.py <variant> <iters>
+Variants: qos | baseline | dsa_only | zs_pl | ps_zl | zs_zl
+Outputs:  experiments/routers/<variant>.npz + <variant>_history.json
+"""
+import json
+import os
+import sys
+
+import jax
+
+from repro.core import io, sac as sac_lib, training
+from repro.env import env as env_lib
+
+variant = sys.argv[1] if len(sys.argv) > 1 else "qos"
+iters = int(sys.argv[2]) if len(sys.argv) > 2 else 700
+
+env_cfg = env_lib.EnvConfig(
+    impact_mode="projected" if variant == "qos_plus" else "paper")
+pool = env_lib.make_env_pool(env_cfg)
+
+use_han = variant not in ("baseline",)
+qos_reward = variant not in ("baseline", "dsa_only")
+sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1, use_han=use_han,
+                            flat_dim=env_cfg.n_experts * 3)
+tc = training.TrainConfig(
+    iterations=iters, n_envs=16, collect_steps=8, updates_per_iter=8,
+    batch_size=256, warmup_transitions=2000, qos_reward=qos_reward,
+    zero_score_pred=variant in ("zs_pl", "zs_zl"),
+    zero_len_pred=variant in ("ps_zl", "zs_zl"),
+    log_every=25, seed=0)
+
+hist_rows = []
+
+
+def log(m):
+    hist_rows.append(m)
+    print(f"[{variant}] it={m['iteration']} trans={m['transitions']} "
+          f"rew={m['collect_reward']:.3f} ent={m['entropy']:.2f} "
+          f"q={m['q_mean']:.2f} ({m['elapsed_s']}s)", flush=True)
+
+
+params, history = training.train_router(env_cfg, sac_cfg, tc, pool=pool, log_fn=log)
+
+os.makedirs("experiments/routers", exist_ok=True)
+io.save_pytree(f"experiments/routers/{variant}.npz", params)
+with open(f"experiments/routers/{variant}_history.json", "w") as f:
+    json.dump(history, f, indent=1)
+
+from repro.core import routers, training as tr
+pol = routers.sac_policy(variant, sac_cfg, params)
+m = tr.evaluate(env_cfg, pool, pol, n_steps=5000, n_envs=4)
+print(f"[{variant}] eval:", {k: round(v, 4) for k, v in m.items()}, flush=True)
+with open(f"experiments/routers/{variant}_eval.json", "w") as f:
+    json.dump(m, f, indent=1)

@@ -1,0 +1,11 @@
+"""H2O-Danube3-4B — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_head=120,
+    d_ff=10240, vocab=32000,
+    attention="swa", window=4096,
+    notes="SWA window=4096 -> sub-quadratic decode; runs long_500k.",
+)

@@ -1,0 +1,89 @@
+"""Request-level feature construction (Eq. 6) and raw-graph observation.
+
+f_q = (p_j, s_hat, d_hat, e_{j,n,t}, d_{j,t}, l_{j,t})  — normalized.
+
+Expert nodes carry (e_n, |Q_run|/R, |Q_wait|/W) plus the pending request's
+per-expert predictions (s_hat_{j,n}, d_hat_{j,n}) and the profiled latency
+gradients (k1, k2) — the per-expert predictions ride on the expert node
+because the arrived-request node connects to *all* experts (§V-B2); this is
+our static-shape encoding of the arrived->expert edge features.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+REQ_FEATS = 6
+EXP_FEATS = 7
+
+
+def build_obs(cfg, pool, state: dict) -> dict:
+    """Returns the padded heterogeneous-graph observation."""
+    q = state["queues"]
+    t = state["clock"]
+    L = cfg.latency_L
+    mo = float(cfg.max_output)
+    mp = float(cfg.max_prompt)
+    r = state["pending"]
+
+    # --- running request nodes (N, R, 6) ---
+    d_cur = q["run_d_cur"].astype(jnp.float32)
+    run_mem = (q["run_p"] + q["run_d_cur"]).astype(jnp.float32) * \
+        pool.mem_per_token[:, None] / pool.mem_capacity[:, None]
+    l_cur = (t - q["run_t_arrive"]) / jnp.maximum(d_cur, 1.0)
+    run_f = jnp.stack([
+        q["run_p"].astype(jnp.float32) / mp,
+        q["run_pred_s"],
+        q["run_pred_d"] / mo,
+        run_mem,
+        d_cur / mo,
+        l_cur / L,
+    ], axis=-1)
+    run_f = jnp.where(q["run_valid"][..., None], run_f, 0.0)
+
+    # --- waiting request nodes (N, W, 6) ---
+    w_wait = (t - q["wait_t_arrive"]) / jnp.maximum(q["wait_pred_d"], 1.0)
+    wait_f = jnp.stack([
+        q["wait_p"].astype(jnp.float32) / mp,
+        q["wait_pred_s"],
+        q["wait_pred_d"] / mo,
+        jnp.zeros_like(w_wait),            # not yet resident in memory
+        jnp.zeros_like(w_wait),            # d_{j,t} = 0
+        w_wait / L,                        # projected per-token wait
+    ], axis=-1)
+    wait_f = jnp.where(q["wait_valid"][..., None], wait_f, 0.0)
+
+    # --- expert nodes (N, 7) ---
+    tok = jnp.where(q["run_valid"], q["run_p"] + q["run_d_cur"], 0)
+    e_n = jnp.sum(tok, -1).astype(jnp.float32) * pool.mem_per_token / pool.mem_capacity
+    exp_f = jnp.stack([
+        e_n,
+        jnp.mean(q["run_valid"].astype(jnp.float32), -1),
+        jnp.mean(q["wait_valid"].astype(jnp.float32), -1),
+        r["pred_s"],
+        r["pred_d"] / mo,
+        pool.k1 * 1e3,
+        pool.k2 * 1e4,
+    ], axis=-1)
+
+    # --- arrived request node (6,) ---
+    arr_f = jnp.stack([
+        r["p_len"].astype(jnp.float32) / mp,
+        jnp.mean(r["pred_s"]),
+        jnp.mean(r["pred_d"]) / mo,
+        jnp.zeros(()),
+        jnp.zeros(()),
+        jnp.zeros(()),
+    ])
+
+    return {
+        "expert": exp_f, "run": run_f, "wait": wait_f,
+        "run_mask": q["run_valid"], "wait_mask": q["wait_valid"],
+        "arrived": arr_f,
+    }
+
+
+def flat_expert_obs(obs: dict) -> jax.Array:
+    """Baseline-RL state: raw expert-level features only (paper §VI-A),
+    i.e. (e_n, |run|, |wait|) per expert — no request-level detail."""
+    return obs["expert"][:, :3].reshape(-1)

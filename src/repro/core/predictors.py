@@ -1,0 +1,199 @@
+"""Generation-score / output-length predictors (paper §V-B1).
+
+The paper fine-tunes ONE DistilBERT with a prepended expert token
+<extra_token_n> to predict 10-bucket quantized generation score and output
+length per expert (top-1 63.4%/73.0%, top-3 97.8%/84.7%).
+
+Offline-container analog: requests carry synthetic token sequences whose
+unigram statistics depend on the latent task type; a small transformer
+encoder with the same expert-token conditioning and the same bucketization
+predicts the per-expert buckets.  The env's noise-model predictions
+(env.predict) are calibrated to the accuracies this model achieves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.profiles import ExpertPool, sample_request
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    vocab: int = 512
+    seq_len: int = 32
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    n_buckets: int = 10
+    max_output: int = 300
+    tokens_per_type: int = 24   # type-characteristic token set size
+    type_token_prob: float = 0.6
+
+
+# ---------------------------------------------------------------------------
+# Synthetic request text
+# ---------------------------------------------------------------------------
+
+
+def make_type_token_table(cfg: PredictorConfig, n_types: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(n_types, cfg.tokens_per_type)),
+        jnp.int32)
+
+
+def request_text(cfg: PredictorConfig, table: jax.Array, ttype: jax.Array,
+                 key: jax.Array) -> jax.Array:
+    """Tokens ~ mixture of the type's token set and uniform noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    from_type = jax.random.bernoulli(k1, cfg.type_token_prob, (cfg.seq_len,))
+    type_tok = table[ttype][jax.random.randint(
+        k2, (cfg.seq_len,), 0, cfg.tokens_per_type)]
+    noise_tok = jax.random.randint(k3, (cfg.seq_len,), 0, cfg.vocab)
+    return jnp.where(from_type, type_tok, noise_tok)
+
+
+# ---------------------------------------------------------------------------
+# Model: tiny transformer encoder with expert-token conditioning
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: PredictorConfig, n_experts: int) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4 + 4 * cfg.n_layers)
+    norm = lambda k, s, sc=1.0: (jax.random.normal(k, s, jnp.float32)
+                                 * sc / np.sqrt(s[0]))
+    p = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab + n_experts, d)) * 0.05,
+        "pos": jax.random.normal(ks[1], (cfg.seq_len + 1, d)) * 0.05,
+        "head_score": norm(ks[2], (d, cfg.n_buckets)),
+        "head_len": norm(ks[3], (d, cfg.n_buckets)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        base = 4 + 4 * i
+        p["layers"].append({
+            "wqkv": norm(ks[base], (d, 3 * d)),
+            "wo": norm(ks[base + 1], (d, d)),
+            "w1": norm(ks[base + 2], (d, 4 * d)),
+            "w2": norm(ks[base + 3], (4 * d, d), 0.5),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        })
+    return p
+
+
+def _ln(x, g):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def forward(params, cfg: PredictorConfig, tokens: jax.Array,
+            expert_id: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S); expert_id: (B,). Returns (score_logits, len_logits)."""
+    B, S = tokens.shape
+    exp_tok = cfg.vocab + expert_id
+    seq = jnp.concatenate([exp_tok[:, None], tokens], axis=1)  # CLS = expert
+    x = params["embed"][seq] + params["pos"][None, :S + 1]
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    for lp in params["layers"]:
+        xn = _ln(x, lp["ln1"])
+        qkv = xn @ lp["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, S + 1, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(B, S + 1, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S + 1, h, dh).transpose(0, 2, 1, 3)
+        a = jax.nn.softmax(q @ k.swapaxes(-1, -2) / np.sqrt(dh), axis=-1)
+        o = (a @ v).transpose(0, 2, 1, 3).reshape(B, S + 1, cfg.d_model)
+        x = x + o @ lp["wo"]
+        xn = _ln(x, lp["ln2"])
+        x = x + jax.nn.gelu(xn @ lp["w1"]) @ lp["w2"]
+    cls = x[:, 0]
+    return cls @ params["head_score"], cls @ params["head_len"]
+
+
+# ---------------------------------------------------------------------------
+# Dataset + training
+# ---------------------------------------------------------------------------
+
+
+def make_batch(cfg: PredictorConfig, pool: ExpertPool, table, key, batch: int):
+    """Batch of (text, expert_id, score_bucket, len_bucket)."""
+    ks = jax.random.split(key, batch)
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        r = sample_request(pool, k1)
+        text = request_text(cfg, table, r["type"], k2)
+        n = jax.random.randint(k3, (), 0, pool.n_experts)
+        sb = jnp.clip((r["score"][n] * cfg.n_buckets).astype(jnp.int32),
+                      0, cfg.n_buckets - 1)
+        lb = jnp.clip((r["out_len"][n] * cfg.n_buckets
+                       // cfg.max_output).astype(jnp.int32),
+                      0, cfg.n_buckets - 1)
+        return text, n, sb, lb
+
+    text, n, sb, lb = jax.vmap(one)(ks)
+    return {"text": text, "expert": n, "score_bucket": sb, "len_bucket": lb}
+
+
+def train(cfg: PredictorConfig, pool: ExpertPool, *, steps: int = 1500,
+          batch: int = 256, lr: float = 1e-3, seed: int = 0,
+          log_every: int = 250, log_fn=print) -> Tuple[dict, Dict[str, float]]:
+    key = jax.random.PRNGKey(seed)
+    table = make_type_token_table(cfg, pool.n_types, seed)
+    params = init_params(key, cfg, pool.n_experts)
+
+    from repro.train import optimizer as opt_lib
+    opt = opt_lib.make_optimizer("adamw", peak_lr=lr, warmup_steps=50,
+                                 total_steps=steps, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, key, i):
+        k1, key = jax.random.split(key)
+        b = make_batch(cfg, pool, table, k1, batch)
+
+        def loss_fn(p):
+            ls, ll = forward(p, cfg, b["text"], b["expert"])
+            ce = lambda lg, y: -jnp.mean(jnp.take_along_axis(
+                jax.nn.log_softmax(lg), y[:, None], axis=-1))
+            return ce(ls, b["score_bucket"]) + ce(ll, b["len_bucket"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params, i)
+        return params, opt_state, key, loss
+
+    for i in range(steps):
+        params, opt_state, key, loss = step_fn(
+            params, opt_state, key, jnp.asarray(i))
+        if log_fn and (i % log_every == 0 or i == steps - 1):
+            log_fn({"step": i, "loss": float(loss)})
+
+    metrics = evaluate(cfg, pool, table, params, seed=seed + 1)
+    return params, metrics
+
+
+def evaluate(cfg: PredictorConfig, pool: ExpertPool, table, params,
+             *, n: int = 4096, seed: int = 1) -> Dict[str, float]:
+    b = make_batch(cfg, pool, table, jax.random.PRNGKey(seed), n)
+    ls, ll = jax.jit(lambda p, t, e: forward(p, cfg, t, e))(
+        params, b["text"], b["expert"])
+
+    def topk_acc(logits, y, k):
+        top = jnp.argsort(-logits, axis=-1)[:, :k]
+        return float(jnp.mean(jnp.any(top == y[:, None], axis=-1)))
+
+    return {
+        "score_top1": topk_acc(ls, b["score_bucket"], 1),
+        "score_top3": topk_acc(ls, b["score_bucket"], 3),
+        "len_top1": topk_acc(ll, b["len_bucket"], 1),
+        "len_top3": topk_acc(ll, b["len_bucket"], 3),
+        "n_params": sum(int(x.size) for x in jax.tree_util.tree_leaves(params)),
+    }

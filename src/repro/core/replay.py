@@ -1,0 +1,53 @@
+"""Fixed-capacity replay buffer as a pure-JAX pytree (donated in the
+training loop; no host round-trips)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init(capacity: int, obs_example: Dict) -> dict:
+    zeros_like_batched = lambda x: jnp.zeros((capacity,) + x.shape, x.dtype)
+    return {
+        "obs": jax.tree.map(zeros_like_batched, obs_example),
+        "next_obs": jax.tree.map(zeros_like_batched, obs_example),
+        "action": jnp.zeros((capacity,), jnp.int32),
+        "reward": jnp.zeros((capacity,), jnp.float32),
+        "discount": jnp.zeros((capacity,), jnp.float32),
+        "ptr": jnp.zeros((), jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+        "capacity": capacity,
+    }
+
+
+def add_batch(buf: dict, obs, action, reward, discount, next_obs) -> dict:
+    """Insert a batch of transitions (ring buffer)."""
+    cap = buf["capacity"]
+    n = action.shape[0]
+    idx = (buf["ptr"] + jnp.arange(n)) % cap
+    set_at = lambda dst, src: dst.at[idx].set(src)
+    return {
+        "obs": jax.tree.map(set_at, buf["obs"], obs),
+        "next_obs": jax.tree.map(set_at, buf["next_obs"], next_obs),
+        "action": buf["action"].at[idx].set(action.astype(jnp.int32)),
+        "reward": buf["reward"].at[idx].set(reward.astype(jnp.float32)),
+        "discount": buf["discount"].at[idx].set(discount.astype(jnp.float32)),
+        "ptr": (buf["ptr"] + n) % cap,
+        "size": jnp.minimum(buf["size"] + n, cap),
+        "capacity": cap,
+    }
+
+
+def sample(buf: dict, key, batch_size: int) -> Dict:
+    idx = jax.random.randint(key, (batch_size,), 0,
+                             jnp.maximum(buf["size"], 1))
+    take = lambda x: x[idx]
+    return {
+        "obs": jax.tree.map(take, buf["obs"]),
+        "next_obs": jax.tree.map(take, buf["next_obs"]),
+        "action": buf["action"][idx],
+        "reward": buf["reward"][idx],
+        "discount": buf["discount"][idx],
+    }

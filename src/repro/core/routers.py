@@ -1,0 +1,95 @@
+"""Routing policies: the paper's four baselines + the QoS-aware DRL router.
+
+* BERT Router (BR)      — greedy argmax of predicted generation score
+                          (what a fine-tuned BERT/DistilBERT router does).
+* Round-Robin (RR)      — cyclic assignment.
+* Shortest Queue First  — argmin(|running| + |waiting|).
+* Baseline RL           — SAC on raw expert-level features with the plain
+                          completion reward (no DSA, no QoS-aware penalty).
+* QoS-aware RL (ours)   — SAC + HAN dynamic state abstraction + action
+                          impact estimator reward (the paper's algorithm).
+
+Each policy is a pure function (policy_state, env_state, obs, key) -> action
+so rollouts stay jittable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sac as sac_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    init_state: Callable   # (key) -> policy state pytree
+    act: Callable          # (pstate, env_state, obs, key) -> (action, pstate)
+
+
+def round_robin(n_experts: int) -> Policy:
+    def init_state(key):
+        return {"i": jnp.zeros((), jnp.int32)}
+
+    def act(pstate, env_state, obs, key):
+        a = (pstate["i"] % n_experts) + 1
+        return a, {"i": pstate["i"] + 1}
+
+    return Policy("RR", init_state, act)
+
+
+def shortest_queue(n_experts: int) -> Policy:
+    def init_state(key):
+        return {}
+
+    def act(pstate, env_state, obs, key):
+        q = env_state["queues"]
+        qlen = jnp.sum(q["run_valid"], -1) + jnp.sum(q["wait_valid"], -1)
+        return jnp.argmin(qlen).astype(jnp.int32) + 1, pstate
+
+    return Policy("SQF", init_state, act)
+
+
+def bert_router() -> Policy:
+    """Greedy predicted-score routing (paper's BR baseline): the predictor
+    plays the role of the fine-tuned BERT scorer."""
+    def init_state(key):
+        return {}
+
+    def act(pstate, env_state, obs, key):
+        return jnp.argmax(env_state["pending"]["pred_s"]).astype(jnp.int32) + 1, pstate
+
+    return Policy("BR", init_state, act)
+
+
+def quality_least_loaded(slack: int = 2) -> Policy:
+    """Beyond-paper heuristic baseline (QLL): among experts whose queue
+    length is within `slack` of the minimum, pick the best predicted
+    score.  Combines SQF's congestion-avoidance with BR's quality signal
+    at zero training cost — the strongest non-learned baseline here."""
+    def init_state(key):
+        return {}
+
+    def act(pstate, env_state, obs, key):
+        q = env_state["queues"]
+        qlen = jnp.sum(q["run_valid"], -1) + jnp.sum(q["wait_valid"], -1)
+        ok = qlen <= jnp.min(qlen) + slack
+        pred = env_state["pending"]["pred_s"]
+        return jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1, pstate
+
+    return Policy("QLL", init_state, act)
+
+
+def sac_policy(name: str, cfg: sac_lib.SACConfig, params,
+               *, greedy: bool = True) -> Policy:
+    def init_state(key):
+        return {}
+
+    def act(pstate, env_state, obs, key):
+        a = sac_lib.act(params, cfg, obs, key, greedy=greedy)
+        return a.astype(jnp.int32), pstate
+
+    return Policy(name, init_state, act)

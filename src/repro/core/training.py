@@ -1,0 +1,199 @@
+"""SAC training loop for the QoS-aware router: vectorized envs, replay,
+jitted collect+update iterations — the whole loop lives inside XLA.
+
+Baseline RL (paper §VI-A) trains through the same loop with
+``use_han=False`` and ``qos_reward=False`` (plain completion reward, raw
+expert-level features).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features, replay, sac as sac_lib
+from repro.env import env as env_lib
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_envs: int = 16
+    collect_steps: int = 8        # env steps per env per iteration
+    updates_per_iter: int = 8
+    batch_size: int = 256
+    buffer_capacity: int = 100_000
+    warmup_transitions: int = 2_000
+    iterations: int = 400
+    lr: float = 3e-4
+    qos_reward: bool = True       # False -> Baseline RL reward (no penalty)
+    zero_score_pred: bool = False  # Fig. 18 ablations
+    zero_len_pred: bool = False
+    seed: int = 0
+    log_every: int = 25
+
+
+def _maybe_zero_preds(tc: TrainConfig, obs: dict) -> dict:
+    if not (tc.zero_score_pred or tc.zero_len_pred):
+        return obs
+    obs = dict(obs)
+    exp = obs["expert"]
+    run, wait = obs["run"], obs["wait"]
+    arr = obs["arrived"]
+    if tc.zero_score_pred:
+        exp = exp.at[..., 3].set(0.0)
+        run = run.at[..., 1].set(0.0)
+        wait = wait.at[..., 1].set(0.0)
+        arr = arr.at[..., 1].set(0.0)
+    if tc.zero_len_pred:
+        exp = exp.at[..., 4].set(0.0)
+        run = run.at[..., 2].set(0.0)
+        wait = wait.at[..., 2].set(0.0)
+        arr = arr.at[..., 2].set(0.0)
+    obs.update(expert=exp, run=run, wait=wait, arrived=arr)
+    return obs
+
+
+def make_reward_fn(env_cfg: env_lib.EnvConfig, pool, tc: TrainConfig):
+    """QoS-aware (Eq. 16) vs plain completion reward."""
+    def reward(env_state, action, info):
+        if tc.qos_reward:
+            return info["reward"]  # phi_sum - penalty - drop
+        return info["phi"]         # Baseline RL: completions only
+    return reward
+
+
+def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
+                 tc: TrainConfig, *, pool=None,
+                 log_fn: Optional[Callable] = None) -> Tuple[dict, list]:
+    """Returns (trained params, history of metric dicts)."""
+    pool = pool if pool is not None else env_lib.make_env_pool(env_cfg)
+    key = jax.random.PRNGKey(tc.seed)
+    k_init, k_env, key = jax.random.split(key, 3)
+
+    params = sac_lib.init_params(k_init, sac_cfg)
+    opt = opt_lib.make_optimizer(
+        "adamw", peak_lr=tc.lr, warmup_steps=100,
+        total_steps=tc.iterations * tc.updates_per_iter,
+        weight_decay=0.0, grad_clip=10.0)
+    opt_state = opt.init(sac_lib.trainable(params))
+
+    env_keys = jax.random.split(k_env, tc.n_envs)
+    env_states = jax.vmap(lambda k: env_lib.reset(env_cfg, pool, k))(env_keys)
+
+    obs0 = features.build_obs(env_cfg, pool, env_lib.reset(
+        env_cfg, pool, jax.random.PRNGKey(0)))
+    buf = replay.init(tc.buffer_capacity, obs0)
+    reward_fn = make_reward_fn(env_cfg, pool, tc)
+
+    def obs_of(env_states):
+        o = jax.vmap(lambda s: features.build_obs(env_cfg, pool, s))(env_states)
+        return _maybe_zero_preds(tc, o)
+
+    @jax.jit
+    def iteration(params, opt_state, env_states, buf, key, step):
+        def collect(carry, _):
+            env_states, buf, key = carry
+            key, k_act = jax.random.split(key)
+            obs = obs_of(env_states)
+            actions = sac_lib.act(params, sac_cfg, obs, k_act)
+
+            def one(s, a):
+                s2, r, info = env_lib.step(env_cfg, pool, s, a)
+                return s2, (r, info)
+
+            env_states2, (rewards, infos) = jax.vmap(one)(env_states, actions)
+            rew = jax.vmap(lambda s, a, i: reward_fn(s, a, i))(
+                env_states, actions, infos)
+            next_obs = obs_of(env_states2)
+            buf = replay.add_batch(buf, obs, actions, rew,
+                                   jnp.ones_like(rew), next_obs)
+            return (env_states2, buf, key), jnp.mean(rew)
+
+        (env_states, buf, key), rews = jax.lax.scan(
+            collect, (env_states, buf, key), None, length=tc.collect_steps)
+
+        def update(carry, _):
+            params, opt_state, key = carry
+            key, k_s = jax.random.split(key)
+            batch = replay.sample(buf, k_s, tc.batch_size)
+
+            def loss_fn(tr):
+                p = sac_lib.merge_trainable(params, tr)
+                return sac_lib.losses(p, sac_cfg, batch)
+
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(sac_lib.trainable(params))
+            new_tr, opt_state, _ = opt.update(
+                grads, opt_state, sac_lib.trainable(params), step)
+            params = sac_lib.merge_trainable(params, new_tr)
+            params = sac_lib.polyak(params, sac_cfg)
+            return (params, opt_state, key), aux
+
+        do_update = buf["size"] >= tc.warmup_transitions
+        def run_updates(args):
+            params, opt_state, key = args
+            (params, opt_state, key), auxs = jax.lax.scan(
+                update, (params, opt_state, key), None,
+                length=tc.updates_per_iter)
+            return params, opt_state, key, jax.tree.map(jnp.mean, auxs)
+
+        def skip_updates(args):
+            params, opt_state, key = args
+            dummy = {"critic_loss": jnp.float32(0), "actor_loss": jnp.float32(0),
+                     "alpha": jnp.exp(params["log_alpha"]),
+                     "entropy": jnp.float32(0), "q_mean": jnp.float32(0)}
+            return params, opt_state, key, dummy
+
+        params, opt_state, key, aux = jax.lax.cond(
+            do_update, run_updates, skip_updates, (params, opt_state, key))
+        aux["collect_reward"] = jnp.mean(rews)
+        return params, opt_state, env_states, buf, key, aux
+
+    history = []
+    t0 = time.time()
+    for it in range(tc.iterations):
+        step = jnp.asarray(it * tc.updates_per_iter, jnp.int32)
+        params, opt_state, env_states, buf, key, aux = iteration(
+            params, opt_state, env_states, buf, key, step)
+        if it % tc.log_every == 0 or it == tc.iterations - 1:
+            m = jax.tree.map(float, aux)
+            m["iteration"] = it
+            m["transitions"] = int((it + 1) * tc.n_envs * tc.collect_steps)
+            m["elapsed_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            if log_fn:
+                log_fn(m)
+    return params, history
+
+
+def evaluate(env_cfg: env_lib.EnvConfig, pool, policy, n_steps: int = 5000,
+             seed: int = 1234, n_envs: int = 4) -> dict:
+    """Run a policy greedily; returns paper metrics (avg QoS, latency/token)."""
+    from repro.core import routers  # noqa: F401 (type only)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, n_envs)
+
+    def run_one(k):
+        state = env_lib.reset(env_cfg, pool, k)
+        pstate = policy.init_state(k)
+
+        def body(carry, i):
+            state, pstate, k = carry
+            k, k_act = jax.random.split(k)
+            obs = features.build_obs(env_cfg, pool, state)
+            a, pstate = policy.act(pstate, state, obs, k_act)
+            state, r, info = env_lib.step(env_cfg, pool, state, a)
+            return (state, pstate, k), r
+
+        (state, _, _), rews = jax.lax.scan(
+            body, (state, pstate, k), jnp.arange(n_steps))
+        return env_lib.episode_metrics(state), jnp.mean(rews)
+
+    metrics, mean_rew = jax.jit(jax.vmap(run_one))(keys)
+    out = {k: float(jnp.mean(v)) for k, v in metrics.items()}
+    out["mean_reward"] = float(jnp.mean(mean_rew))
+    return out

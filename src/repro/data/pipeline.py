@@ -1,0 +1,76 @@
+"""Deterministic synthetic LM data pipeline.
+
+Markov n-gram mixture corpus: each "domain" has its own transition
+structure so small models measurably learn (loss drops below unigram
+entropy).  Batches are generated per (seed, step) — fully deterministic
+and restart-safe (resume at step k reproduces the exact stream), sharded
+onto the mesh with the microbatch layout the trainer expects:
+(M, B/M, S) with dim 1 over data axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1
+    n_domains: int = 4
+    branching: int = 8       # successors per token
+    seed: int = 0
+
+
+def _domain_tables(cfg: DataConfig) -> np.ndarray:
+    """(n_domains, vocab, branching) successor tables."""
+    rng = np.random.default_rng(cfg.seed)
+    return rng.integers(0, cfg.vocab,
+                        size=(cfg.n_domains, cfg.vocab, cfg.branching))
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, mesh=None, sharding_=None):
+        self.cfg = cfg
+        self.tables = jnp.asarray(_domain_tables(cfg), jnp.int32)
+        self.mesh = mesh
+        self.sharding = sharding_
+        self._gen = jax.jit(self._generate)
+
+    def _generate(self, step: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        kd, k0, kb = jax.random.split(key, 3)
+        B = cfg.global_batch
+        domain = jax.random.randint(kd, (B,), 0, cfg.n_domains)
+        tok0 = jax.random.randint(k0, (B,), 0, cfg.vocab)
+        branch = jax.random.randint(kb, (B, cfg.seq_len), 0, cfg.branching)
+
+        def step_fn(tok, br):
+            nxt = self.tables[domain, tok, br]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step_fn, tok0, branch.T)
+        tokens = toks.T  # (B, S)
+        if cfg.microbatches > 1:
+            tokens = tokens.reshape(cfg.microbatches,
+                                    B // cfg.microbatches, cfg.seq_len)
+        return tokens
+
+    def batch(self, step: int) -> dict:
+        tokens = self._gen(jnp.asarray(step, jnp.int32))
+        if self.sharding is not None:
+            tokens = jax.device_put(tokens, self.sharding)
+        return {"tokens": tokens}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,70 @@
+"""Activation-sharding hook.
+
+Model code calls ``constrain(x, *logical_axes)`` at shardable activation
+boundaries.  Outside a mesh policy this is a no-op (CPU tests); inside
+``use_mesh_policy`` the logical axes map to mesh axes and a
+``with_sharding_constraint`` is inserted — this is how the MoE dispatch
+buffers get their (expert=model, capacity=data) layout without the model
+depending on any mesh object.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+class MeshPolicy:
+    """Maps logical activation axes -> mesh axes (or None)."""
+
+    def __init__(self, mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, logical_axes) -> PartitionSpec:
+        return PartitionSpec(*[self.rules.get(a) for a in logical_axes])
+
+
+def current_policy() -> Optional[MeshPolicy]:
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def use_mesh_policy(policy: Optional[MeshPolicy]):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Attach a sharding constraint if a mesh policy is active.
+
+    ``logical_axes`` has one entry per dim of x (None = unsharded).  A mesh
+    axis is only applied if the dim is divisible by the axis size.
+    """
+    policy = current_policy()
+    if policy is None:
+        return x
+    axes = []
+    for dim, name in zip(x.shape, logical_axes):
+        mesh_axes = policy.rules.get(name) if name else None
+        if mesh_axes is None:
+            axes.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        for m in mesh_axes:
+            size *= policy.mesh.shape[m]
+        axes.append(tuple(mesh_axes) if dim % size == 0 else None)
+    spec = PartitionSpec(*[a if a is None or len(a) > 1 else a[0] for a in axes])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, spec))

@@ -1,0 +1,234 @@
+"""Parameter/state sharding rules.
+
+Strategy (train): FSDP over the ``data`` (+``pod``) axes on the widest
+non-tensor-parallel dim of every weight; tensor parallelism over ``model``
+on heads / ff / vocab / experts.  Serving uses the same TP layout with
+params replicated over data (weights are read-only; FSDP would add
+per-step all-gathers to every decode step).
+
+Rules are keyed by the parameter's *name* (last pytree path component) and
+describe the trailing dims; any extra leading dims (layer stacking from
+scan-over-layers) are left unsharded.  A mesh axis is applied only when the
+dim size is divisible by it — e.g. recurrentgemma's 10 q-heads fall back to
+replicated automatically (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis names
+FSDP = "fsdp"   # data(+pod) sharding of params
+TP = "tp"       # model axis
+
+# name -> logical spec of the trailing dims (longest match wins)
+_PARAM_RULES = {
+    # embeddings / heads
+    "embed": (TP, FSDP),          # (vocab, d)
+    "lm_head": (FSDP, TP),        # (d, vocab)
+    # attention
+    "wq": (FSDP, TP, None),       # (d, H, dh)
+    "wk": (FSDP, TP, None),       # (d, KV, dh)
+    "wv": (FSDP, TP, None),
+    "wo": (TP, None, FSDP),       # (H, dh, d)
+    "bq": (TP, None),
+    "bk": (TP, None),
+    "bv": (TP, None),
+    # dense mlp
+    "w_gate": (FSDP, TP),         # (d, f)
+    "w_up": (FSDP, TP),
+    "w_down": (TP, FSDP),         # (f, d)
+    "w1": (FSDP, TP),
+    "b1": (TP,),
+    "w2": (TP, FSDP),
+    "b2": (None,),
+    # moe (stacked expert dim first)
+    "router": (None, None),
+    # rwkv time mix
+    "wr": (FSDP, TP),
+    "wg": (FSDP, TP),
+    "wA": (FSDP, None),
+    "wB": (None, FSDP),
+    "u": (TP, None),              # (H, dh)
+    "wk_c": (FSDP, TP),
+    "wv_c": (TP, FSDP),
+    "wr_c": (FSDP, TP),
+    # rglru
+    "w_x": (FSDP, TP),            # (d, rnn)
+    "conv_w": (None, TP),         # (cw, rnn)
+    "conv_b": (TP,),
+    "w_r": (FSDP, TP),
+    "w_i": (FSDP, TP),
+    "b_r": (TP,),
+    "b_i": (TP,),
+    "lam": (TP,),
+    "w_out": (TP, FSDP),          # (rnn, d)
+}
+
+# MoE expert-stacked weights: (E, d, f) / (E, f, d) — expert dim -> TP (EP)
+_MOE_RULES = {
+    "w_gate": (TP, FSDP, None),
+    "w_up": (TP, FSDP, None),
+    "w_down": (TP, None, FSDP),
+}
+
+
+def _axes_for(mesh: Mesh, logical: Optional[str], fsdp_axes: Tuple[str, ...],
+              dim: int) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    axes = fsdp_axes if logical == FSDP else ("model",)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if size == 1 or dim % size != 0:
+        # try a prefix of the axes (e.g. only "data" when (pod,data) doesn't divide)
+        for k in range(len(axes) - 1, 0, -1):
+            sz = int(np.prod([mesh.shape[a] for a in axes[:k]]))
+            if sz > 1 and dim % sz == 0:
+                return axes[:k]
+        return None
+    return axes
+
+
+def fsdp_axes_for(mesh: Mesh, train: bool) -> Tuple[str, ...]:
+    if not train:
+        return ()  # serving: replicate params over data for read-only weights
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(path: Sequence, arr_shape: Tuple[int, ...], mesh: Mesh,
+               *, train: bool) -> PartitionSpec:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1]
+    in_moe = "moe" in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _PARAM_RULES
+    logical = rules.get(name)
+    fsdp = fsdp_axes_for(mesh, train)
+    if logical is None:
+        # norms / scalars / unknown small params: FSDP 1-D big vectors, else
+        # replicate
+        return PartitionSpec(*([None] * len(arr_shape)))
+    n_lead = len(arr_shape) - len(logical)
+    if n_lead < 0:  # e.g. adafactor factored moments with a reduced dim
+        return PartitionSpec(*([None] * len(arr_shape)))
+    spec = [None] * n_lead
+    for dim, lg in zip(arr_shape[n_lead:], logical):
+        axes = _axes_for(mesh, lg, fsdp, dim)
+        spec.append(None if axes is None else (axes if len(axes) > 1 else axes[0]))
+    return PartitionSpec(*spec)
+
+
+def shard_params_specs(param_shapes, mesh: Mesh, *, train: bool):
+    """param_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    def one(path, x):
+        return NamedSharding(mesh, param_spec(path, x.shape, mesh, train=train))
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def batch_axes(mesh: Mesh, batch_size: int) -> Optional[Tuple[str, ...]]:
+    """Axes to shard the batch dim over: the largest divisible subset of
+    (pod, data) — preferring full, then data alone, then pod alone."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    candidates = [axes] + [(a,) for a in sorted(
+        axes, key=lambda a: -mesh.shape[a])]
+    for cand in candidates:
+        size = int(np.prod([mesh.shape[a] for a in cand]))
+        if size > 1 and batch_size % size == 0:
+            return cand
+    return None
+
+
+def data_spec(mesh: Mesh, batch_size: int, ndim: int) -> NamedSharding:
+    """Shard dim 0 (batch) over pod+data, rest replicated."""
+    ax = batch_axes(mesh, batch_size)
+    spec = [None] * ndim
+    if ax is not None:
+        spec[0] = ax if len(ax) > 1 else ax[0]
+    return NamedSharding(mesh, PartitionSpec(*spec))
+
+
+def cache_spec(path: Sequence, arr_shape: Tuple[int, ...], mesh: Mesh,
+               batch_size: int) -> PartitionSpec:
+    """Serving cache sharding: batch dim over data(+pod), kv-heads/state
+    channels over model when divisible."""
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1]
+    bax = batch_axes(mesh, batch_size)
+    model_ok = lambda d: (d % mesh.shape["model"] == 0 and mesh.shape["model"] > 1)
+
+    def with_batch(spec):
+        return PartitionSpec(*spec)
+
+    if name in ("pos", "enc_len"):
+        if len(arr_shape) == 1:  # per-sequence positions (B,)
+            return PartitionSpec(bax)
+        return PartitionSpec(*([None] * len(arr_shape)))
+    if name in ("kv_pos",):
+        lead = [None] * (len(arr_shape) - 2)
+        return with_batch(lead + [bax, None]) if len(arr_shape) >= 2 else PartitionSpec(None)
+    if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+        # (L?, B, S, KV, dh): batch over data, SEQUENCE over model
+        # (flash-decoding style KV split: softmax combines via psum; each
+        # device streams only its S-shard of the cache from HBM)
+        spec = [None] * len(arr_shape)
+        spec[-4] = bax
+        if model_ok(arr_shape[-3]):
+            spec[-3] = "model"
+        elif model_ok(arr_shape[-2]):
+            spec[-2] = "model"
+        return with_batch(spec)
+    if name == "S":  # rwkv state (L, B, H, dk, dv)
+        spec = [None] * len(arr_shape)
+        spec[-4] = bax
+        if model_ok(arr_shape[-3]):
+            spec[-3] = "model"
+        return with_batch(spec)
+    if name in ("tm_prev", "cm_prev"):  # (L, B, d)
+        spec = [None] * len(arr_shape)
+        spec[-2] = bax
+        if model_ok(arr_shape[-1]):
+            spec[-1] = "model"
+        return with_batch(spec)
+    if name == "h":  # rglru (n, B, rnn)
+        spec = [None] * len(arr_shape)
+        spec[-2] = bax
+        if model_ok(arr_shape[-1]):
+            spec[-1] = "model"
+        return with_batch(spec)
+    if name == "conv":  # (n, B, cw-1, rnn)
+        spec = [None] * len(arr_shape)
+        spec[-3] = bax
+        if model_ok(arr_shape[-1]):
+            spec[-1] = "model"
+        return with_batch(spec)
+    spec = [None] * len(arr_shape)
+    if len(arr_shape) >= 2:
+        spec[-2] = bax
+    return with_batch(spec)
+
+
+def shard_cache_specs(cache_shapes, mesh: Mesh, batch_size: int):
+    def one(path, x):
+        return NamedSharding(mesh, cache_spec(path, x.shape, mesh, batch_size))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def activation_rules(mesh: Mesh, *, train: bool) -> dict:
+    """Logical activation axes -> mesh axes for api.constrain()."""
+    bax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return {
+        "batch": bax or None,
+        "tokens": bax or None,       # flattened token dim
+        "experts": ("model",),
+        "capacity": bax or None,
+        "heads": ("model",),
+        "seq": ("model",),           # sequence parallelism segments
+        "embed": None,
+        "ff": ("model",),
+        "vocab": ("model",),
+    }

@@ -1,0 +1,186 @@
+"""Real serving engine: iteration-level scheduling over actual JAX models.
+
+This is the data plane the analytic simulator abstracts: each
+``ExpertServer`` wraps a (reduced) architecture with a slot-based
+continuous-batching cache (per-sequence positions), runs Orca-style
+iterations — admit-one-prefill OR decode-all — with jitted prefill/decode
+steps, and measures real wall-clock latency per token.
+
+``calibrate`` fits the paper's latency gradients (k1, k2 — Eq. 13/14) from
+engine measurements by linear regression, replacing the paper's RTX-4090
+vLLM profiling with TPU/CPU-native profiling of our own engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # prompt token ids
+    max_new: int = 32
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def latency_per_token(self) -> Optional[float]:
+        if self.finish_time is None or not self.generated:
+            return None
+        return (self.finish_time - self.submit_time) / len(self.generated)
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ExpertServer:
+    """One edge expert: a model instance + slot-based continuous batching."""
+
+    def __init__(self, name: str, cfg: ModelConfig, params, *,
+                 slots: int = 4, max_len: int = 256, eos_token: int = 1):
+        assert cfg.family in ("dense", "moe"), "engine serves LM families"
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Request] = {}
+        self.waiting: collections.deque = collections.deque()
+        self.cur_tokens = np.zeros((slots,), np.int32)
+        self.iteration_log: List[dict] = []  # (kind, p or total_tokens, dt)
+
+        @functools.partial(jax.jit, static_argnames=("plen",))
+        def prefill_one(params, cache, tokens, length, slot, plen):
+            del plen  # static: distinct bucket lengths compile separately
+            logits, pc = model_lib.prefill(params, cfg, tokens[None],
+                                           max_len, lengths=length[None])
+            # merge single-request cache into the batched cache at `slot`
+            new_cache = {
+                "k": cache["k"].at[:, slot].set(pc["k"][:, 0]),
+                "v": cache["v"].at[:, slot].set(pc["v"][:, 0]),
+                "kv_pos": cache["kv_pos"].at[slot].set(pc["kv_pos"][0]),
+                "pos": cache["pos"].at[slot].set(pc["pos"][0]),
+            }
+            return jnp.argmax(logits[0]).astype(jnp.int32), new_cache
+
+        @jax.jit
+        def decode_all(params, cache, tokens):
+            logits, cache = model_lib.decode_step(params, cfg, cache, tokens)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prefill_one = prefill_one
+        self._decode_all = decode_all
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.submit_time = req.submit_time or time.perf_counter()
+        self.waiting.append(req)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    def has_work(self) -> bool:
+        return bool(self.active) or bool(self.waiting)
+
+    def _free_slot(self) -> Optional[int]:
+        used = set(r.slot for r in self.active.values())
+        for s in range(self.slots):
+            if s not in used:
+                return s
+        return None
+
+    def step(self) -> List[Request]:
+        """One engine iteration; returns finished requests."""
+        finished: List[Request] = []
+        slot = self._free_slot()
+        if self.waiting and slot is not None:
+            req = self.waiting.popleft()
+            p = len(req.tokens)
+            plen = _bucket(p)
+            toks = np.zeros((plen,), np.int32)
+            toks[:p] = req.tokens[:p]
+            t0 = time.perf_counter()
+            first, self.cache = self._prefill_one(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(p, jnp.int32), slot, plen=plen)
+            first = int(jax.block_until_ready(first))
+            dt = time.perf_counter() - t0
+            req.slot = slot
+            req.generated.append(first)
+            req.first_token_time = time.perf_counter()
+            self.active[req.rid] = req
+            self.cur_tokens[slot] = first
+            self.iteration_log.append(
+                {"kind": "prefill", "x": p, "dt": dt, "expert": self.name})
+            return finished
+        if self.active:
+            tokens = jnp.asarray(self.cur_tokens)
+            total_tokens = int(sum(int(self.cache["pos"][r.slot])
+                                   for r in self.active.values()))
+            t0 = time.perf_counter()
+            nxt, self.cache = self._decode_all(self.params, self.cache, tokens)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            dt = time.perf_counter() - t0
+            self.iteration_log.append(
+                {"kind": "decode", "x": total_tokens, "dt": dt,
+                 "expert": self.name})
+            for rid in list(self.active):
+                req = self.active[rid]
+                tok = int(nxt[req.slot])
+                req.generated.append(tok)
+                self.cur_tokens[req.slot] = tok
+                done = (tok == self.eos or len(req.generated) >= req.max_new
+                        or int(self.cache["pos"][req.slot]) >= self.max_len - 1)
+                if done:
+                    req.finish_time = time.perf_counter()
+                    finished.append(req)
+                    del self.active[rid]
+        return finished
+
+
+def calibrate(server: ExpertServer) -> dict:
+    """Fit k1 (prefill s/token) and k2 (decode s/queued-token) from the
+    engine's measured iterations — Eq. 13/14 done on OUR hardware."""
+    log = server.iteration_log
+    pre = [(e["x"], e["dt"]) for e in log if e["kind"] == "prefill"]
+    dec = [(e["x"], e["dt"]) for e in log if e["kind"] == "decode"]
+
+    def fit(points):
+        if len(points) < 2:
+            return 0.0, 0.0
+        x = np.array([p[0] for p in points], np.float64)
+        y = np.array([p[1] for p in points], np.float64)
+        A = np.stack([x, np.ones_like(x)], axis=1)
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        return float(coef[0]), float(coef[1])
+
+    k1, b1 = fit(pre)
+    k2, b2 = fit(dec)
+    return {"k1": max(k1, 0.0), "k1_intercept": b1,
+            "k2": max(k2, 0.0), "k2_intercept": b2,
+            "n_prefill": len(pre), "n_decode": len(dec)}

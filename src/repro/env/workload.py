@@ -1,0 +1,59 @@
+"""Request arrival processes.
+
+* ``poisson``   — exponential inter-arrivals at rate λ (paper §VI-A).
+* ``realworld`` — BurstGPT-like [17] non-stationary process: slow diurnal
+  modulation + a two-state (calm/burst) Markov intensity, giving the heavy
+  bursts of Fig. 8.  Average rate is normalized to λ.
+
+All jittable; state is a small pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    kind: str = "poisson"       # poisson | realworld
+    rate: float = 5.0           # λ requests / s
+    # realworld parameters
+    diurnal_period: float = 600.0
+    diurnal_amp: float = 0.5
+    burst_rate_mult: float = 4.0
+    burst_on_prob: float = 0.02   # per arrival: calm -> burst
+    burst_off_prob: float = 0.25  # per arrival: burst -> calm
+
+
+def init_state() -> dict:
+    return {"burst": jnp.zeros((), jnp.bool_)}
+
+
+def current_rate(cfg: WorkloadConfig, state: dict, t: jax.Array) -> jax.Array:
+    if cfg.kind == "poisson":
+        return jnp.asarray(cfg.rate, jnp.float32)
+    diurnal = 1.0 + cfg.diurnal_amp * jnp.sin(
+        2.0 * jnp.pi * t / cfg.diurnal_period)
+    burst = jnp.where(state["burst"], cfg.burst_rate_mult, 1.0)
+    # normalize so the long-run mean stays ~cfg.rate
+    p_on = cfg.burst_on_prob / (cfg.burst_on_prob + cfg.burst_off_prob)
+    norm = 1.0 + p_on * (cfg.burst_rate_mult - 1.0)
+    return cfg.rate * diurnal * burst / norm
+
+
+def next_arrival(cfg: WorkloadConfig, state: dict, t: jax.Array,
+                 key: jax.Array) -> Tuple[jax.Array, dict]:
+    """Returns (dt to next arrival, new workload state)."""
+    k1, k2 = jax.random.split(key)
+    rate = jnp.maximum(current_rate(cfg, state, t), 1e-3)
+    dt = jax.random.exponential(k1) / rate
+    if cfg.kind == "poisson":
+        return dt, state
+    u = jax.random.uniform(k2)
+    flip_on = (~state["burst"]) & (u < cfg.burst_on_prob)
+    flip_off = state["burst"] & (u < cfg.burst_off_prob)
+    burst = jnp.where(flip_on, True, jnp.where(flip_off, False, state["burst"]))
+    return dt, {"burst": burst}

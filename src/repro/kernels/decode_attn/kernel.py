@@ -1,0 +1,110 @@
+"""Pallas TPU decode attention: one query token per sequence against a long
+KV cache (flash-decoding style KV streaming).
+
+Grid (B, n_kv): the KV sequence is innermost-sequential; all H query heads
+are processed per block (the 1-token query is tiny), with online-softmax
+state (m, l, acc) per head in VMEM scratch.  GQA via index arithmetic on a
+(KV, bkv, dh) block — scores are computed per KV head for its G query
+heads.  `lengths` masks cache slots beyond each sequence's position.
+
+This is the serving hot path for decode_32k / long_500k: per-device HBM
+traffic == one streaming read of the local KV shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_kv: int, n_kv: int, G: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0, 0]
+    k_lo = j * block_kv
+
+    @pl.when(k_lo < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (H, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (KV, bkv, dh)
+        v = v_ref[0].astype(jnp.float32)
+        KV = k.shape[0]
+        H = q.shape[0]
+        qg = q.reshape(KV, G, -1)                         # (KV, G, dh)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)           # (KV, G, bkv)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = kpos < length
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_scr[...]                               # (KV, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)           # (KV, G, dh)
+        acc_scr[...] = corr[..., None] * acc_scr[...] + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        H = o_ref.shape[1]
+        o_ref[0] = (acc_scr[...] / denom).reshape(H, -1).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_kv: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, dh); k, v: (B, KV, S, dh); lengths: (B,) valid KV length.
+    Returns (B, H, dh)."""
+    B, H, dh = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    block_kv = min(block_kv, S)
+    pad = (-S) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_kv = (S + pad) // block_kv
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / np.sqrt(dh), block_kv=block_kv,
+        n_kv=n_kv, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, dh), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, KV, block_kv, dh), lambda b, j: (b, 0, j, 0)),
+            pl.BlockSpec((1, KV, block_kv, dh), lambda b, j: (b, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k, v)
+    return out

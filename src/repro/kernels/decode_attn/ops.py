@@ -1,0 +1,18 @@
+"""Jitted wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attn.kernel import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "use_pallas"))
+def decode_attn(q, k, v, lengths, *, block_kv: int = 256,
+                use_pallas: bool = True):
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, lengths)
+    return decode_attention(q, k, v, lengths, block_kv=block_kv,
+                            interpret=jax.default_backend() != "tpu")

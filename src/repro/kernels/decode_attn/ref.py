@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, H, dh); k, v: (B, KV, S, dh); lengths: (B,) -> (B, H, dh)."""
+    B, H, dh = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    mask = jnp.arange(S)[None, None] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (prefill): causal / sliding-window, GQA.
+
+Tiling: grid (B, H, n_q, n_kv) with the KV dimension innermost-sequential;
+online-softmax state (m, l, acc) lives in VMEM scratch in fp32 and the
+output block is written on the last KV step.  GQA is handled with zero
+KV duplication via the K/V BlockSpec index map (query head h reads KV head
+h // group).  Block shapes default to (128, 128) x d_head — MXU-aligned
+for d_head in {64, 112, 120, 128} (the lane dim is d_head; sublanes 128).
+
+Masked-out blocks (strictly-future causal blocks / outside-window blocks)
+are skipped with pl.when — they cost grid iterations but no FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_kv: int, n_kv: int, seq_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = i * block_q
+    k_lo = j * block_kv
+    # block-level relevance (python-static flags, traced indices)
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = relevant & (k_lo <= q_lo + block_q - 1)
+    if window > 0:
+        relevant = relevant & (k_lo + block_kv - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bkv, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=-1)
+        acc_scr[...] = corr[:, None] * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, dh); k, v: (B, KV, Skv, dh) -> (B, H, Sq, dh)."""
+    B, H, Sq, dh = q.shape
+    _, KV, Skv, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    n_q = (Sq + pad_q) // block_q
+    n_kv = (Skv + pad_kv) // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / np.sqrt(dh), causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return out

@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Selects the Pallas kernel on TPU and interpret-mode execution elsewhere
+(CPU validation); falls back to the jnp oracle for gradient paths (the
+kernel is forward-only — serving hot path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "use_pallas"))
+def flash_attn(q, k, v, *, causal: bool = True, window: int = 0,
+               block_q: int = 128, block_kv: int = 128,
+               use_pallas: bool = True):
+    """q: (B, H, Sq, dh); k, v: (B, KV, Skv, dh) -> (B, H, Sq, dh)."""
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=not _on_tpu())

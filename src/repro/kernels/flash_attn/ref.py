@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (exact masked softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, H, Sq, dh); k, v: (B, KV, Skv, dh)."""
+    B, H, Sq, dh = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)  # fully-masked rows -> 0
+    o = jnp.einsum("bhqs,bhsd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

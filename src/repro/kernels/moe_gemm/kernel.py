@@ -1,0 +1,110 @@
+"""Pallas TPU grouped expert GEMM for MoE layers.
+
+out[e] = act(x[e] @ w_gate[e]) * (x[e] @ w_up[e])      (fused SwiGLU gate)
+or a plain grouped GEMM  out[e] = x[e] @ w[e]          (down projection)
+
+Grid (E, n_c, n_f, n_d): d (contraction) is innermost-sequential with an
+fp32 accumulator in VMEM scratch, so the full (d, f) expert weight never
+needs to be VMEM-resident at once — (block_c x block_d) x (block_d x
+block_f) MXU tiles stream through.  128-aligned blocks by default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc, *, n_d: int):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(d == n_d - 1)
+    def _done():
+        o_ref[0] = acc[...].astype(o_ref.dtype)
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, o_ref, accg, accu, *, n_d: int):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        accg[...] = jnp.zeros_like(accg)
+        accu[...] = jnp.zeros_like(accu)
+
+    x = x_ref[0].astype(jnp.float32)
+    accg[...] += jax.lax.dot_general(
+        x, wg_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    accu[...] += jax.lax.dot_general(
+        x, wu_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(d == n_d - 1)
+    def _done():
+        g = accg[...]
+        o_ref[0] = (g * jax.nn.sigmoid(g) * accu[...]).astype(o_ref.dtype)
+
+
+def _blocks(C, F, D, block_c, block_f, block_d):
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, F, D, bc, bf, bd)
+    return bc, bf, bd
+
+
+def grouped_gemm(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+                 block_f: int = 128, block_d: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    bc, bf, bd = _blocks(C, F, D, block_c, block_f, block_d)
+    n_d = D // bd
+    kernel = functools.partial(_gemm_kernel, n_d=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // bc, F // bf, n_d),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def grouped_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                   block_c: int = 128, block_f: int = 128,
+                   block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (E, C, D); w_gate, w_up: (E, D, F) -> silu(x@wg) * (x@wu)."""
+    E, C, D = x.shape
+    F = w_gate.shape[-1]
+    bc, bf, bd = _blocks(C, F, D, block_c, block_f, block_d)
+    n_d = D // bd
+    kernel = functools.partial(_swiglu_kernel, n_d=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // bc, F // bf, n_d),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up)

@@ -1,0 +1,24 @@
+"""Jitted wrappers for the grouped expert GEMM kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gemm.kernel import grouped_gemm, grouped_swiglu
+from repro.kernels.moe_gemm.ref import grouped_gemm_ref, grouped_swiglu_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def expert_gemm(x, w, *, use_pallas: bool = True):
+    if not use_pallas:
+        return grouped_gemm_ref(x, w)
+    return grouped_gemm(x, w, interpret=jax.default_backend() != "tpu")
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def expert_swiglu(x, w_gate, w_up, *, use_pallas: bool = True):
+    if not use_pallas:
+        return grouped_swiglu_ref(x, w_gate, w_up)
+    return grouped_swiglu(x, w_gate, w_up,
+                          interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for grouped expert GEMMs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def grouped_swiglu_ref(x, w_gate, w_up):
+    g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_up.astype(jnp.float32))
+    return (jax.nn.silu(g) * u).astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w",
+                                             "use_pallas"))
+def lru(log_a, b, h0, *, block_t: int = 128, block_w: int = 512,
+        use_pallas: bool = True):
+    if not use_pallas:
+        return rglru_scan_ref(log_a, b, h0)
+    log_a = jnp.minimum(log_a, 0.0)
+    B, T, W = log_a.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    bw = block_w if W % block_w == 0 else W
+    y = rglru_scan(log_a, b, h0, block_t=bt, block_w=bw,
+                   interpret=jax.default_backend() != "tpu")
+    return y[:, :T] if pad else y

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """log_a, b: (B, T, W); h0: (B, W) -> (B, T, W)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b32 = b.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    xs = (a.transpose(1, 0, 2), b32.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2).astype(b.dtype)

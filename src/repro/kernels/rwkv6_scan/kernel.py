@@ -1,0 +1,95 @@
+"""Pallas TPU RWKV6 (Finch) chunked WKV scan.
+
+Recurrence per head (state S: (K, V) matrix):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t S_{t-1} + (r_t . (u ⊙ k_t)) v_t
+
+Grid (B, H, n_chunks), chunks innermost-sequential; the (K, V) fp32 state
+lives in VMEM scratch across chunk steps.  Within a chunk the intra-chunk
+interaction uses the relative-decay matrix D[i,s] = exp(p_i - p_{s+1}) <= 1
+(numerically safe), identical math to the jnp reference / model layer.
+Chunk length = sublane-friendly 16..64; K = V = head size (64 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                 chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)       # (L, V)
+    dlog = w_ref[0, 0].astype(jnp.float32)    # (L, K) log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)          # (K,)
+    S = s_scr[...]                            # (K, V)
+    L = r.shape[0]
+
+    p = jnp.cumsum(dlog, axis=0) - dlog       # exclusive cumsum
+    p_end = p[-1] + dlog[-1]                  # (K,)
+
+    # inter-chunk: y_i += (r_i * exp(p_i)) @ S
+    r_dec = r * jnp.exp(p)
+    y_inter = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[i,s] = sum_k r_i k_s exp(p_i - p_s - dlog_s), s < i
+    D = jnp.exp(p[:, None, :] - (p + dlog)[None, :, :])      # (L, L, K)
+    A = jnp.einsum("ik,sk,isk->is", r, k, D)
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    A = jnp.where(si < li, A, 0.0)
+    y_intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    diag = jnp.sum(r * u[None] * k, axis=-1)                 # (L,)
+    y = y_inter + y_intra + diag[:, None] * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    k_dec = k * jnp.exp(p_end[None] - (p + dlog))
+    s_scr[...] = jnp.exp(p_end)[:, None] * S + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, dlog: jax.Array,
+               u: jax.Array, *, chunk: int = 32,
+               interpret: bool = False) -> jax.Array:
+    """r, k, dlog: (B, H, T, K); v: (B, H, T, V); u: (H, K) -> y (B, H, T, V).
+
+    dlog = log(w_t) must be <= 0 (decay).  T must be a multiple of chunk
+    (callers pad).
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, dlog, u)

@@ -1,0 +1,24 @@
+"""Jitted wrapper for the RWKV6 chunked scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def wkv(r, k, v, dlog, u, *, chunk: int = 32, use_pallas: bool = True):
+    if not use_pallas:
+        return rwkv6_scan_ref(r, k, v, dlog, u)
+    T = r.shape[2]
+    pad = (-T) % chunk
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v, dlog = padf(r), padf(k), padf(v), padf(dlog)
+    y = rwkv6_scan(r, k, v, dlog, u, chunk=chunk,
+                   interpret=jax.default_backend() != "tpu")
+    return y[:, :, :T] if pad else y

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: token-by-token RWKV6 recurrence via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, dlog, u):
+    """r, k, dlog: (B, H, T, K); v: (B, H, T, V); u: (H, K) -> (B, H, T, V)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+
+    def step(S, xs):
+        rt, kt, vt, dt = xs   # (B, H, K/V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", rt, u, kt)
+        y = y + bonus[..., None] * vt
+        S = jnp.exp(dt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(a.astype(jnp.float32).transpose(2, 0, 1, 3)
+               for a in (r, k, v, dlog))
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

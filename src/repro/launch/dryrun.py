@@ -1,0 +1,136 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh and record memory / cost / collective stats.
+
+MUST be executed as a fresh process (device count is locked at first jax
+init):  PYTHONPATH=src python -m repro.launch.dryrun --arch <id> --shape <s>
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs, supported_shapes  # noqa: E402
+from repro.launch import hlo_analysis, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": mesh.size, "ok": False,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+    }
+    try:
+        with mesh:
+            fn, arg_specs = steps.make_step(cfg, shape_name, mesh)
+            lowered = jax.jit(fn).lower(*arg_specs)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else (ca or {})
+            txt = compiled.as_text()
+            hlo = hlo_analysis.analyze(txt)
+            # top tensor shapes (perf triage without recompiling)
+            sizes: dict = {}
+            dtb = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1,
+                   "f16": 2, "s8": 1, "u8": 1, "s64": 8, "u64": 8, "f64": 8}
+            for mm in re.finditer(r"([a-z0-9]+)\[([\d,]+)\]", txt):
+                dt, dims = mm.groups()
+                nel = 1
+                for d in dims.split(","):
+                    nel *= int(d)
+                b = nel * dtb.get(dt, 4)
+                if b > 1e8:
+                    sizes[f"{dt}[{dims}]"] = b
+            top_buffers = sorted(sizes.items(), key=lambda kv: -kv[1])[:10]
+            record.update({
+                "ok": True,
+                "lower_s": round(t1 - t0, 2),
+                "compile_s": round(t2 - t1, 2),
+                "hlo_text_bytes": len(txt),
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                    "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+                },
+                "cost_analysis": {
+                    "flops": ca.get("flops"),
+                    "bytes_accessed": ca.get("bytes accessed"),
+                    "transcendentals": ca.get("transcendentals"),
+                },
+                "hlo_totals": hlo.as_dict(),
+                "top_buffers": [{"type": k, "gb": round(v / 1e9, 3)}
+                                for k, v in top_buffers],
+            })
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                hlo_path = os.path.join(
+                    out_dir,
+                    f"{arch.replace('.', '_')}__{shape_name}__{mesh_name}.hlo.gz")
+                with gzip.open(hlo_path, "wt") as f:
+                    f.write(txt)
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+                  f"compile={t2 - t1:.1f}s flops/dev={hlo.flops:.3e} "
+                  f"coll_wire/dev={hlo.collective_wire_bytes:.3e}B")
+            print(f"  memory_analysis: args={record['memory']['argument_bytes']}"
+                  f" temp={record['memory']['temp_bytes']}"
+                  f" out={record['memory']['output_bytes']}")
+            print(f"  cost_analysis: flops={record['cost_analysis']['flops']}"
+                  f" bytes={record['cost_analysis']['bytes_accessed']}")
+    except Exception as e:  # noqa: BLE001 - record the failure, don't crash the sweep
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {record['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn_out = os.path.join(
+            out_dir, f"{arch.replace('.', '_')}__{shape_name}__{mesh_name}.json")
+        with open(fn_out, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="architecture id (default: all)")
+    p.add_argument("--shape", default=None, help="shape cell (default: all supported)")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args()
+
+    archs = [args.arch] if args.arch else list(list_archs())
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else list(supported_shapes(cfg))
+        for shape in shapes:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Loop-aware cost analysis of compiled (post-SPMD-partitioning) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which silently
+drops ~n_layers x the FLOPs for scan-over-layers models and all in-loop
+collectives.  This module re-derives the executed totals by parsing
+``compiled.as_text()``:
+
+  * computations are walked from ENTRY with a multiplier stack; a while op
+    multiplies its body/condition by the trip count extracted from the
+    condition computation's `s32[] constant(N)` bound (scan lowering);
+  * FLOPs: every `dot` (2 * prod(result) * prod(contracting dims)) and a
+    1-flop/element charge for fusions (elementwise epilogue work);
+  * memory bytes: operand + result bytes of every materializing op
+    (fusion boundaries = HBM traffic model, matching XLA's own
+    bytes-accessed convention);
+  * collective bytes: operand bytes per op (spec formula) plus an
+    "effective wire bytes" using per-op multipliers (all-reduce 2x, etc.).
+
+Everything is PER DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# bytes actually moved over links, as a multiple of operand bytes
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SKIP_MEMORY_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "while",
+    "conditional", "call",
+}
+
+
+def _type_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuple types)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    result_type: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, OpInfo]
+    order: List[str]
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:{[\d,]*})?))\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if (not line.startswith(" ") and line.endswith("{")
+                and "->" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if m:
+                cur = Computation(m.group(1), {}, [])
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind, rest = m.groups()
+        # operand names: %foo references before any ), metadata, etc.
+        operand_part = rest.split("), ")[0] if "), " in rest else rest
+        operands = re.findall(r"%([\w.\-]+)", operand_part)
+        cur.ops[name] = OpInfo(name, kind, rtype, operands, line)
+        cur.order.append(name)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = []
+    for op in cond.ops.values():
+        if op.kind == "constant" and op.result_type.startswith("s32[]"):
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _called_comps(op: OpInfo) -> List[str]:
+    out = []
+    for key in ("calls=", "to_apply=", "condition=", "body="):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-]+)", op.line):
+            out.append(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0                 # MXU work: dot/conv contractions only
+    elementwise_flops: float = 0.0     # VPU estimate: 1 flop/output element
+    memory_bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    unknown_customcalls: List[str] = dataclasses.field(default_factory=list)
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "elementwise_flops": self.elementwise_flops,
+            "memory_bytes": self.memory_bytes,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_counts": self.collective_counts,
+            "unknown_customcalls": self.unknown_customcalls[:10],
+            "while_trips": self.while_trips,
+        }
+
+
+def _dot_flops(op: OpInfo, symtab: Dict[str, str]) -> float:
+    res = _shape_dims(op.result_type)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.line)
+    k = 1
+    if m and op.operands:
+        lhs_type = symtab.get(op.operands[0])
+        if lhs_type:
+            sh = _shape_dims(lhs_type)
+            if sh:
+                _, ldims = sh
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(ldims):
+                        k *= ldims[idx]
+    return 2.0 * out_elems * k
+
+
+def _slice_fusion_traffic(op: OpInfo, comps: Dict[str, Computation],
+                          symtab: Dict[str, str]) -> Optional[float]:
+    """If `op` is a fusion wrapping dynamic(-update)-slice, return its
+    in-place traffic model: 2x the slice bytes + non-aliased small operands
+    (None if the fusion isn't slice-shaped)."""
+    called = [c for c in _called_comps(op) if c in comps]
+    if not called:
+        return None
+    comp = comps[called[0]]
+    dus = [o for o in comp.ops.values() if o.kind == "dynamic-update-slice"]
+    ds = [o for o in comp.ops.values() if o.kind == "dynamic-slice"]
+    if not dus and not ds:
+        return None
+    result_bytes = _type_bytes(op.result_type)
+    if dus:
+        # traffic = read+write of each update slice (buffer is aliased)
+        local_syms = {o.name: o.result_type for o in comp.ops.values()}
+        total = 0.0
+        for d in dus:
+            upd = d.operands[1] if len(d.operands) > 1 else None
+            upd_bytes = _type_bytes(local_syms.get(upd, "")) if upd else 0.0
+            total += 2 * (upd_bytes or result_bytes)
+        return total
+    # pure dynamic-slice fusion: read slice + write result
+    return 2.0 * result_bytes
+
+
+def analyze(text: str) -> CostTotals:
+    comps, entry = parse_hlo(text)
+    totals = CostTotals()
+    if entry is None:
+        return totals
+
+    # global symbol table op-name -> result type (names are unique per module
+    # in practice; collisions only affect K-dim lookup of dots, rare)
+    symtab: Dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops.values():
+            symtab.setdefault(op.name, op.result_type)
+
+    visited_guard = set()
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        if depth > 32 or comp_name not in comps:
+            return
+        key = (comp_name, mult, depth)
+        comp = comps[comp_name]
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            kind = op.kind
+            if kind == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                totals.while_trips.append(trips)
+                if body in comps:
+                    walk(body, mult * trips, depth + 1)
+                continue
+            if kind == "fusion":
+                # descend for dots hidden inside fusions
+                for c in _called_comps(op):
+                    if c in comps:
+                        walk_dots_only(c, mult, depth + 1)
+                # in-place slice fusions: XLA wraps dynamic(-update)-slice
+                # in loop fusions; actual traffic is the slice, not the
+                # full aliased buffer
+                slice_traffic = _slice_fusion_traffic(op, comps, symtab)
+                if slice_traffic is not None:
+                    totals.memory_bytes += mult * slice_traffic
+                    totals.elementwise_flops += mult * (result_bytes / 2.0)
+                    continue
+            if kind in ("call", "conditional"):
+                for c in _called_comps(op):
+                    if c in comps:
+                        walk(c, mult, depth + 1)
+                continue
+
+            operand_bytes = sum(_type_bytes(symtab.get(o, "")) for o in op.operands)
+            result_bytes = _type_bytes(op.result_type)
+
+            if kind == "dynamic-update-slice":
+                # in-place update: traffic = read+write of the UPDATED
+                # slice only (XLA aliases the buffer inside loops)
+                upd = _type_bytes(symtab.get(op.operands[1], "")) \
+                    if len(op.operands) > 1 else result_bytes
+                totals.memory_bytes += mult * 2 * upd
+                continue
+            if kind == "dynamic-slice":
+                totals.memory_bytes += mult * 2 * result_bytes
+                continue
+            if kind == "dot":
+                totals.flops += mult * _dot_flops(op, symtab)
+                totals.memory_bytes += mult * (operand_bytes + result_bytes)
+                continue
+            if kind == "custom-call":
+                tgt = re.search(r'custom_call_target="([^"]+)"', op.line)
+                tname = tgt.group(1) if tgt else "?"
+                if re.search(r"matmul|gemm|dot", tname, re.I):
+                    # K = lhs elements / result "M-rows" heuristic
+                    totals.flops += mult * _dot_flops(op, symtab)
+                elif tname not in totals.unknown_customcalls:
+                    totals.unknown_customcalls.append(tname)
+                totals.memory_bytes += mult * (operand_bytes + result_bytes)
+                continue
+            if any(kind.startswith(c) for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if kind.startswith(c))
+                ob = operand_bytes if operand_bytes else result_bytes
+                totals.collective_operand_bytes += mult * ob
+                totals.collective_wire_bytes += mult * ob * _WIRE_FACTOR[base]
+                totals.collective_counts[base] = \
+                    totals.collective_counts.get(base, 0) + int(mult)
+                totals.memory_bytes += mult * (operand_bytes + result_bytes)
+                continue
+            if kind in _SKIP_MEMORY_OPS:
+                continue
+            if kind == "fusion":
+                # ~1 flop per output element for the fused elementwise work
+                # (tracked separately: it's VPU work, not MXU roofline)
+                totals.elementwise_flops += mult * (result_bytes / 2.0)
+            totals.memory_bytes += mult * (operand_bytes + result_bytes)
+
+    def walk_dots_only(comp_name: str, mult: float, depth: int):
+        if depth > 32 or comp_name not in comps:
+            return
+        for op in comps[comp_name].ops.values():
+            if op.kind == "dot":
+                totals.flops += mult * _dot_flops(op, symtab)
+            for c in _called_comps(op):
+                if c in comps and op.kind in ("fusion", "call"):
+                    walk_dots_only(c, mult, depth + 1)
+
+    walk(entry, 1.0)
+    return totals

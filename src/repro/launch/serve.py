@@ -1,0 +1,142 @@
+"""Serving launcher: multi-expert cluster with real JAX decode engines and
+the QoS-aware router in front.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 40 --router sqf
+
+Spins up N ExpertServers (reduced configs of assigned architectures),
+profiles them to calibrate (k1, k2), routes a Poisson request stream with
+the chosen policy, and reports the paper's metrics (avg QoS, avg latency
+per token) measured on REAL engine wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.env import env as env_lib, profiles, serve_engine
+from repro.env.serve_engine import ExpertServer, Request, calibrate
+from repro.models import model as model_lib
+
+DEFAULT_EXPERTS = ["qwen1.5-0.5b", "h2o-danube-3-4b", "starcoder2-15b"]
+
+
+def build_cluster(arch_names: List[str], seed: int = 0,
+                  slots: int = 4, max_len: int = 192) -> List[ExpertServer]:
+    servers = []
+    for i, name in enumerate(arch_names):
+        cfg = reduce_config(get_config(name))
+        params = model_lib.init_params(jax.random.PRNGKey(seed + i), cfg)
+        servers.append(ExpertServer(f"expert{i}:{name}", cfg, params,
+                                    slots=slots, max_len=max_len))
+    return servers
+
+
+def profile_cluster(servers: List[ExpertServer], n_warm: int = 8) -> List[dict]:
+    """Warm up (all prefill buckets -> all compiles happen here) +
+    calibrate each expert's latency gradients (Eq. 13/14)."""
+    rng = np.random.default_rng(0)
+    fits = []
+    for srv in servers:
+        # one request per bucket first (compile), then randoms (measure)
+        lens = [12, 30, 60, 120] + \
+            [int(rng.integers(8, 120)) for _ in range(n_warm)]
+        for j, p in enumerate(lens):
+            srv.submit(Request(rid=1000 + j, max_new=6,
+                               tokens=rng.integers(2, srv.cfg.vocab, p)))
+            while srv.n_waiting:
+                srv.step()
+        while srv.has_work():
+            srv.step()
+        # drop compile iterations (first occurrence per bucket)
+        srv.iteration_log = srv.iteration_log[8:]
+        fits.append(calibrate(srv))
+        srv.iteration_log.clear()
+    return fits
+
+
+def run_stream(servers: List[ExpertServer], *, n_requests: int = 40,
+               rate: float = 20.0, router: str = "sqf",
+               latency_L: float = 1.0, seed: int = 0,
+               policy_fn=None) -> dict:
+    """latency_L defaults to 1 s/token: CPU-host engines are ~3 orders
+    slower than the TPU/GPU regime the 30 ms paper default targets."""
+    """Route a Poisson stream over real engines; iteration-level scheduling
+    is driven by stepping every busy engine between arrivals."""
+    rng = np.random.default_rng(seed)
+    pool = profiles.make_pool(len(servers), seed=seed)  # quality profiles
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    t0 = time.perf_counter()
+    done: List[tuple] = []
+    i = 0
+    rr_i = 0
+    while i < n_requests or any(s.has_work() for s in servers):
+        now = time.perf_counter() - t0
+        if i < n_requests and now >= arrivals[i]:
+            p = int(rng.integers(8, 120))
+            ttype = int(rng.integers(0, pool.n_types))
+            req = Request(rid=i, tokens=rng.integers(2, 250, p),
+                          max_new=int(rng.integers(4, 24)))
+            if policy_fn is not None:
+                n = policy_fn(servers, req)
+            elif router == "rr":
+                n = rr_i % len(servers)
+                rr_i += 1
+            elif router == "sqf":
+                n = int(np.argmin([s.n_running + s.n_waiting for s in servers]))
+            else:
+                n = int(rng.integers(0, len(servers)))
+            req.ttype = ttype  # type: ignore[attr-defined]
+            servers[n].submit(req)
+            req.expert = n  # type: ignore[attr-defined]
+            i += 1
+            continue
+        stepped = False
+        for srv in servers:
+            if srv.has_work():
+                for r in srv.step():
+                    done.append(r)
+                stepped = True
+        if not stepped:
+            time.sleep(0.001)
+
+    qos, lats = [], []
+    for r in done:
+        lat = r.latency_per_token or 0.0
+        score = float(pool.quality_mean[r.expert, r.ttype])  # type: ignore
+        qos.append(score * (lat <= latency_L))
+        lats.append(lat)
+    return {
+        "completed": len(done),
+        "avg_qos": float(np.mean(qos)) if qos else 0.0,
+        "avg_latency_per_token_ms": float(np.mean(lats)) * 1e3 if lats else 0.0,
+        "p95_latency_per_token_ms": float(np.percentile(lats, 95)) * 1e3 if lats else 0.0,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--experts", nargs="*", default=DEFAULT_EXPERTS)
+    p.add_argument("--requests", type=int, default=30)
+    p.add_argument("--rate", type=float, default=20.0)
+    p.add_argument("--router", default="sqf", choices=["rr", "sqf", "random"])
+    args = p.parse_args()
+
+    print(f"[serve] building cluster: {args.experts}")
+    servers = build_cluster(args.experts)
+    fits = profile_cluster(servers)
+    for srv, fit in zip(servers, fits):
+        print(f"[serve] {srv.name}: k1={fit['k1']*1e3:.3f} ms/tok "
+              f"k2={fit['k2']*1e6:.1f} us/tok (n={fit['n_prefill']}/{fit['n_decode']})")
+    m = run_stream(servers, n_requests=args.requests, rate=args.rate,
+                   router=args.router)
+    print(f"[serve] router={args.router} -> {m}")
+
+
+if __name__ == "__main__":
+    main()

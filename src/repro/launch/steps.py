@@ -1,0 +1,196 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture x shape) cell.  Used by the trainer, the serving engine and
+the multi-pod dry-run (which lowers these without allocating anything).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, ModelConfig, ShapeConfig
+from repro.distributed import sharding
+from repro.distributed.api import MeshPolicy, use_mesh_policy
+from repro.models import model as model_lib
+from repro.train import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt: opt_lib.Optimizer,
+                    policy: Optional[MeshPolicy] = None) -> Callable:
+    """Training step with optional microbatched gradient accumulation.
+
+    For cfg.microbatches > 1 the batch arrives pre-shaped as
+    (M, B/M, ...) with dim 1 sharded over data — the scan slices cost no
+    resharding and activations peak at 1/M of the full batch.
+    """
+    M = max(1, cfg.microbatches)
+    acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def grad_one(params, mb):
+        def loss_fn(p):
+            return model_lib.lm_loss(p, cfg, mb)
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state, batch):
+        with use_mesh_policy(policy):
+            if M == 1:
+                grads, metrics = grad_one(state["params"], batch)
+            else:
+                def body(acc, mb):
+                    g, m = grad_one(state["params"], mb)
+                    acc = jax.tree.map(
+                        lambda a, x: a + x.astype(acc_dtype), acc, g)
+                    return acc, m
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), state["params"])
+                grads, ms = jax.lax.scan(body, g0, batch)
+                grads = jax.tree.map(lambda g: g / M, grads)
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+            params, opt_state, stats = opt.update(
+                grads, state["opt"], state["params"], state["step"])
+            new_state = {"params": params, "opt": opt_state,
+                         "step": state["step"] + 1}
+            metrics = dict(metrics, **stats)
+            return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      policy: Optional[MeshPolicy] = None) -> Callable:
+    def prefill_step(params, batch):
+        with use_mesh_policy(policy):
+            return model_lib.prefill(params, cfg, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     policy: Optional[MeshPolicy] = None) -> Callable:
+    def decode_step(params, cache, token):
+        with use_mesh_policy(policy):
+            return model_lib.decode_step(params, cfg, cache, token)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Specs (no allocation — ShapeDtypeStruct only)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, shard: Optional[NamedSharding] = None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=shard)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *, train: bool):
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    shards = sharding.shard_params_specs(shapes, mesh, train=train)
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh), shapes, shards)
+
+
+def state_specs(cfg: ModelConfig, opt: opt_lib.Optimizer, mesh: Mesh):
+    p_specs = param_specs(cfg, mesh, train=True)
+    opt_shapes = jax.eval_shape(opt.init, p_specs)
+
+    def opt_shard(path, x):
+        # moment tensors inherit the param rule of the matching param name
+        # (paths look like m/<param path> or v/<param path>/vr)
+        names = [getattr(p, "key", None) for p in path]
+        sub = [p for p in path if getattr(p, "key", None) not in
+               ("m", "v", "vr", "vc")]
+        shp = x.shape
+        spec = sharding.param_spec(sub, shp, mesh, train=True) if sub else \
+            PartitionSpec(*([None] * len(shp)))
+        # factored moments drop a trailing dim — recompute on mismatch
+        if len(spec) != len(shp):
+            spec = PartitionSpec(*([None] * len(shp)))
+        return _sds(shp, x.dtype, NamedSharding(mesh, spec))
+
+    o_specs = jax.tree_util.tree_map_with_path(opt_shard, opt_shapes)
+    return {"params": p_specs, "opt": o_specs,
+            "step": _sds((), jnp.int32, NamedSharding(mesh, PartitionSpec()))}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    M = max(1, cfg.microbatches)
+
+    def spec(shape_tail, dtype):
+        if M == 1:
+            sh = sharding.data_spec(mesh, B, 1 + len(shape_tail))
+            return _sds((B,) + shape_tail, dtype, sh)
+        mb = B // M
+        base = sharding.data_spec(mesh, mb, 1 + len(shape_tail))
+        sh = NamedSharding(mesh, PartitionSpec(None, *base.spec))
+        return _sds((M, mb) + shape_tail, dtype, sh)
+
+    tok = spec((S,), jnp.int32)
+    if cfg.family == "encdec":
+        frames = spec((S, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return {"frames": frames, "tokens": tok}
+    return {"tokens": tok}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model),
+                               jnp.dtype(cfg.compute_dtype),
+                               sharding.data_spec(mesh, B, 3))}
+    return _sds((B, S), jnp.int32, sharding.data_spec(mesh, B, 2))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: model_lib.init_cache(cfg, B, S))
+    shards = sharding.shard_cache_specs(shapes, mesh, B)
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh), shapes, shards)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B = shape.global_batch
+    return _sds((B,), jnp.int32, sharding.data_spec(mesh, B, 1))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                opt: Optional[opt_lib.Optimizer] = None):
+    """All lowering inputs for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        opt = opt or opt_lib.make_optimizer(cfg.optimizer)
+        return (state_specs(cfg, opt, mesh), batch_specs(cfg, shape, mesh))
+    if shape.kind == "prefill":
+        return (param_specs(cfg, mesh, train=False),
+                prefill_input_specs(cfg, shape, mesh))
+    if shape.kind == "decode":
+        return (param_specs(cfg, mesh, train=False),
+                cache_specs(cfg, shape, mesh),
+                decode_token_specs(cfg, shape, mesh))
+    raise ValueError(shape.kind)
+
+
+def make_step(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+              opt: Optional[opt_lib.Optimizer] = None) -> Tuple[Callable, tuple]:
+    """(jit-able step fn, lowering arg specs) for a cell."""
+    shape = SHAPES[shape_name]
+    policy = MeshPolicy(mesh, sharding.activation_rules(
+        mesh, train=shape.kind == "train"))
+    if shape.kind == "train":
+        opt = opt or opt_lib.make_optimizer(cfg.optimizer)
+        fn = make_train_step(cfg, opt, policy)
+        return fn, input_specs(cfg, shape_name, mesh, opt)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len, policy=policy)
+        return fn, input_specs(cfg, shape_name, mesh)
+    fn = make_decode_step(cfg, policy)
+    return fn, input_specs(cfg, shape_name, mesh)

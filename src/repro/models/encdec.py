@@ -1,0 +1,248 @@
+"""Whisper-medium backbone: encoder-decoder transformer (audio family).
+
+The conv frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, S_enc, d_model) — ``input_specs`` in the
+launcher provides them.  Positions are sinusoidal for both stacks (deviation
+from Whisper's learned decoder positions, noted in DESIGN.md, so that the
+32k/500k shape cells don't require multi-GB position tables).
+
+Decode carries two caches: decoder self-attention KV (grows with step) and
+cross-attention KV (computed once from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def sinusoidal_positions(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def init_attn(key, cfg, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], (d, h, dh), dtype),
+        "wk": layers.dense_init(ks[1], (d, h, dh), dtype),
+        "wv": layers.dense_init(ks[2], (d, h, dh), dtype),
+        "wo": layers.dense_init(ks[3], (h, dh, d), dtype,
+                                scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_mlp(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {"w1": layers.dense_init(k1, (d, f), dtype),
+            "b1": jnp.zeros((f,), dtype),
+            "w2": layers.dense_init(k2, (f, d), dtype,
+                                    scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def _ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"ln1": _ln(d, dtype), "attn": init_attn(k1, cfg, dtype),
+            "ln2": _ln(d, dtype), "mlp": init_mlp(k2, cfg, dtype)}
+
+
+def init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": _ln(d, dtype), "self_attn": init_attn(k1, cfg, dtype),
+            "ln2": _ln(d, dtype), "cross_attn": init_attn(k2, cfg, dtype),
+            "ln3": _ln(d, dtype), "mlp": init_mlp(k3, cfg, dtype)}
+
+
+def init_params(key, cfg) -> dict:
+    dtype = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "embed": layers.embed_init(k1, (cfg.vocab_padded, d), dtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(
+            jax.random.split(k2, cfg.n_enc_layers)),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(
+            jax.random.split(k3, cfg.n_layers)),
+        "enc_final_ln": _ln(d, dtype),
+        "dec_final_ln": _ln(d, dtype),
+        "lm_head": layers.dense_init(k4, (d, cfg.vocab_padded), dtype),
+    }
+
+
+def _mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"]
+
+
+def _mha(p, cfg, xq, xkv, *, causal):
+    q = jnp.einsum("bsd,dhe->bshe", xq, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", xkv, p["wv"])
+    o = layers.blockwise_attention(q, k, v, causal=causal,
+                                   block_q=cfg.attn_block_q,
+                                   block_kv=cfg.attn_block_kv)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), k, v
+
+
+def encode(params, cfg, frames: jax.Array) -> jax.Array:
+    """frames: (B, S, d) precomputed frame embeddings (frontend stub)."""
+    B, S, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(S, d).astype(x.dtype)[None]
+
+    def body(h, lp):
+        hn = layers.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        a, _, _ = _mha(lp["attn"], cfg, hn, hn, causal=False)
+        h = h + a
+        h = h + _mlp(lp["mlp"], layers.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return layers.layer_norm(x, params["enc_final_ln"]["w"],
+                             params["enc_final_ln"]["b"], cfg.norm_eps)
+
+
+def decode_train(params, cfg, enc_out: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Teacher-forced decoder. Returns logits (B, T, Vp)."""
+    B, T = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(T, d).astype(x.dtype)[None]
+
+    def body(h, lp):
+        hn = layers.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        a, _, _ = _mha(lp["self_attn"], cfg, hn, hn, causal=True)
+        h = h + a
+        hn = layers.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        a, _, _ = _mha(lp["cross_attn"], cfg, hn, enc_out, causal=False)
+        h = h + a
+        h = h + _mlp(lp["mlp"], layers.layer_norm(h, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = layers.layer_norm(x, params["dec_final_ln"]["w"],
+                          params["dec_final_ln"]["b"], cfg.norm_eps)
+    return _unembed(params, cfg, x)
+
+
+def _unembed(params, cfg, x):
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    if cfg.vocab_padded != cfg.vocab:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits
+
+
+def forward(params, cfg, batch) -> Tuple[jax.Array, jax.Array]:
+    """batch: dict(frames (B,S,d), tokens (B,T)). Returns (logits, aux)."""
+    enc = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, enc, batch["tokens"])
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    h, dh = cfg.n_heads, cfg.d_head
+    dtype = jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, h, dh), dtype),
+        "self_v": jnp.zeros((L, batch, max_len, h, dh), dtype),
+        "cross_k": jnp.zeros((L, batch, max_len, h, dh), dtype),
+        "cross_v": jnp.zeros((L, batch, max_len, h, dh), dtype),
+        "enc_len": jnp.zeros((), jnp.int32),
+        "kv_pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch, max_len: int):
+    """Encode frames and prime the cross-attention cache; decoder starts
+    from BOS (position 0). batch: dict(frames (B,S,d))."""
+    frames = batch["frames"] if isinstance(batch, dict) else batch
+    B, S, _ = frames.shape
+    enc = encode(params, cfg, frames)
+
+    def kv_body(_, lp):
+        k = jnp.einsum("bsd,dhe->bshe", enc, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", enc, lp["cross_attn"]["wv"])
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(kv_body, None, params["dec_layers"])
+    pad = max_len - S
+    ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = init_cache(cfg, B, max_len)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    cache["enc_len"] = jnp.asarray(S, jnp.int32)
+    return cache
+
+
+def decode_step(params, cfg, cache, token):
+    B = token.shape[0]
+    pos = cache["pos"]
+    d = cfg.d_model
+    x = params["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))
+    posf = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    angle = pos.astype(jnp.float32) / jnp.power(10000.0, posf / d)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    x = x + pe.astype(x.dtype)[None]
+    kv_pos = cache["kv_pos"].at[:, pos].set(pos)
+    Smax = cache["self_k"].shape[2]
+    enc_valid = jnp.arange(Smax)[None] < cache["enc_len"]
+    enc_pos = jnp.where(enc_valid, jnp.arange(Smax)[None], -1)
+    enc_pos = jnp.broadcast_to(enc_pos, (B, Smax))
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        hn = layers.layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", hn, lp["self_attn"]["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", hn, lp["self_attn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", hn, lp["self_attn"]["wv"])
+        sk = sk.at[:, pos].set(k[:, 0])
+        sv = sv.at[:, pos].set(v[:, 0])
+        o = layers.decode_attention(q[:, 0], sk, sv, kv_pos, pos)
+        h = h + jnp.einsum("bhe,hed->bd", o, lp["self_attn"]["wo"])[:, None]
+        hn = layers.layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", hn, lp["cross_attn"]["wq"])
+        # cross attention: attend over all encoder positions
+        o = layers.decode_attention(q[:, 0], ck, cv, enc_pos,
+                                    jnp.full((B,), Smax, jnp.int32))
+        h = h + jnp.einsum("bhe,hed->bd", o, lp["cross_attn"]["wo"])[:, None]
+        h = h + _mlp(lp["mlp"], layers.layer_norm(h, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps))
+        return h, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache)
+    cache["self_k"], cache["self_v"] = new_sk, new_sv
+    cache["kv_pos"] = kv_pos
+    cache["pos"] = pos + 1
+    x = layers.layer_norm(x, params["dec_final_ln"]["w"],
+                          params["dec_final_ln"]["b"], cfg.norm_eps)
+    return _unembed(params, cfg, x)[:, 0], cache

@@ -1,0 +1,383 @@
+"""RecurrentGemma (Griffin) — RG-LRU recurrent blocks + local attention,
+layer pattern (rec, rec, attn) [arXiv:2402.19427].
+
+Temporal mixing:
+  recurrent block:  x -> {linear -> causal depthwise conv1d -> RG-LRU}
+                         ⊙ gelu(linear gate) -> linear out
+  RG-LRU:  r_t = σ(x W_r), i_t = σ(x W_i), a_t = exp(-c softplus(Λ) r_t),
+           h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)      (c = 8)
+  attention block:  MQA local attention, window cfg.window, RoPE.
+
+Training uses jax.lax.associative_scan over time (O(T log T) depth); decode
+carries (h, conv_state) per recurrent layer and a ring KV cache per local
+attention layer.  26 layers = 8 superblocks of (rec, rec, attn) + 2 tail rec.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # RG-LRU temperature
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": layers.dense_init(ks[0], (d, f), dtype),
+        "w_up": layers.dense_init(ks[1], (d, f), dtype),
+        "w_down": layers.dense_init(ks[2], (f, d), dtype,
+                                    scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_rec_layer(key, cfg, dtype) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "norm1": jnp.zeros((d,), dtype), "norm2": jnp.zeros((d,), dtype),
+        "w_x": layers.dense_init(ks[0], (d, r), dtype),
+        "w_gate": layers.dense_init(ks[1], (d, r), dtype),
+        "conv_w": (jax.random.normal(ks[2], (cw, r), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "w_r": layers.dense_init(ks[3], (r, r), dtype),
+        "b_r": jnp.zeros((r,), dtype),
+        "w_i": layers.dense_init(ks[4], (r, r), dtype),
+        "b_i": jnp.zeros((r,), dtype),
+        # Λ init so a^c·softplus spans useful decay range
+        "lam": jax.random.uniform(ks[5], (r,), jnp.float32, 0.4, 0.9).astype(jnp.float32),
+        "w_out": layers.dense_init(ks[6], (r, d), dtype,
+                                   scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        "mlp": init_mlp(ks[7], cfg, dtype),
+    }
+
+
+def init_attn_layer(key, cfg, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 5)
+    return {
+        "norm1": jnp.zeros((d,), dtype), "norm2": jnp.zeros((d,), dtype),
+        "wq": layers.dense_init(ks[0], (d, h, dh), dtype),
+        "wk": layers.dense_init(ks[1], (d, kv, dh), dtype),
+        "wv": layers.dense_init(ks[2], (d, kv, dh), dtype),
+        "wo": layers.dense_init(ks[3], (h, dh, d), dtype,
+                                scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        "mlp": init_mlp(ks[4], cfg, dtype),
+    }
+
+
+def _pattern_counts(cfg) -> Tuple[int, int]:
+    """(n_superblocks, n_tail_rec). 26 = 8*3 + 2 for recurrentgemma-2b."""
+    period = len(cfg.block_pattern)
+    n_super = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_super * period
+    return n_super, n_tail
+
+
+def init_params(key, cfg) -> dict:
+    dtype = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_super, n_tail = _pattern_counts(cfg)
+
+    def init_super(k):
+        ka, kb, kc = jax.random.split(k, 3)
+        return {
+            "rec1": init_rec_layer(ka, cfg, dtype),
+            "rec2": init_rec_layer(kb, cfg, dtype),
+            "attn": init_attn_layer(kc, cfg, dtype),
+        }
+
+    params = {
+        "embed": layers.embed_init(k1, (cfg.vocab_padded, cfg.d_model), dtype),
+        "super": jax.vmap(init_super)(jax.random.split(k2, n_super)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": layers.dense_init(k4, (cfg.d_model, cfg.vocab_padded), dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(lambda k: init_rec_layer(k, cfg, dtype))(
+            jax.random.split(k3, n_tail))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b, conv_state):
+    """Depthwise causal conv. x: (B,T,r), w: (cw,r), conv_state: (B,cw-1,r)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([conv_state, x], axis=1)  # (B, T+cw-1, r)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else conv_state
+    return out + b[None, None], new_state
+
+
+def rg_lru_scan(x, r_gate, i_gate, lam, h0):
+    """x, gates: (B,T,r) fp32; h0: (B,r). Returns (h_seq, h_last)."""
+    log_a = -_C * jax.nn.softplus(lam)[None, None] * r_gate  # (B,T,r) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-9, 1.0)) * (i_gate * x)
+    # fold initial state into the first step
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def rec_block(p, cfg, x, st, *, single: bool):
+    """Temporal-mixing recurrent block. st: {h (B,r), conv (B,cw-1,r)}."""
+    B, T, d = x.shape
+    bx = jnp.einsum("btd,dr->btr", x, p["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dr->btr", x, p["w_gate"]))
+    bx, conv_state = causal_conv1d(bx, p["conv_w"], p["conv_b"], st["conv"])
+    bx32 = bx.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("btr,rs->bts", bx32, p["w_r"].astype(jnp.float32)) + p["b_r"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("btr,rs->bts", bx32, p["w_i"].astype(jnp.float32)) + p["b_i"].astype(jnp.float32))
+    if single:
+        log_a = -_C * jax.nn.softplus(p["lam"])[None, None] * r_gate
+        a = jnp.exp(log_a)
+        h = a * st["h"][:, None] + \
+            jnp.sqrt(jnp.clip(1 - jnp.square(a), 1e-9, 1.0)) * (i_gate * bx32)
+        h_last = h[:, -1]
+    else:
+        h, h_last = rg_lru_scan(bx32, r_gate, i_gate, p["lam"], st["h"])
+    out = jnp.einsum("btr,rd->btd", h.astype(gate.dtype) * gate, p["w_out"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def attn_block(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    q = layers.apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                          cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = layers.apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                          cfg.rope_theta).transpose(0, 2, 1, 3)
+    o = layers.blockwise_attention(q, k, v, causal=True, window=cfg.window,
+                                   block_q=cfg.attn_block_q,
+                                   block_kv=cfg.attn_block_kv)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), k, v
+
+
+def _mlp(p, x):
+    return layers.geglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def rec_layer(p, cfg, x, st, *, single: bool):
+    h, st = rec_block(p, cfg, layers.rms_norm(x, p["norm1"], cfg.norm_eps),
+                      st, single=single)
+    x = x + h
+    x = x + _mlp(p["mlp"], layers.rms_norm(x, p["norm2"], cfg.norm_eps))
+    return x, st
+
+
+def attn_layer_full(p, cfg, x, positions):
+    h, k, v = attn_block(p, cfg, layers.rms_norm(x, p["norm1"], cfg.norm_eps),
+                         positions)
+    x = x + h
+    x = x + _mlp(p["mlp"], layers.rms_norm(x, p["norm2"], cfg.norm_eps))
+    return x, k, v
+
+
+def attn_layer_decode(p, cfg, x, pos, st):
+    """st: {k (B,W,KV,dh), v, kv_pos (B,W)}; ring cache."""
+    B = x.shape[0]
+    W = st["k"].shape[1]
+    slot = pos % W
+    hn = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (B, 1))
+    q = jnp.einsum("bsd,dhe->bshe", hn, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", hn, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", hn, p["wv"])
+    q = layers.apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                          cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = layers.apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                          cfg.rope_theta).transpose(0, 2, 1, 3)
+    k_cache = st["k"].at[:, slot].set(k[:, 0])
+    v_cache = st["v"].at[:, slot].set(v[:, 0])
+    kv_pos = st["kv_pos"].at[:, slot].set(pos)
+    o = layers.decode_attention(q[:, 0], k_cache, v_cache, kv_pos, pos)
+    x = x + jnp.einsum("bhe,hed->bd", o, p["wo"])[:, None]
+    x = x + _mlp(p["mlp"], layers.rms_norm(x, p["norm2"], cfg.norm_eps))
+    return x, {"k": k_cache, "v": v_cache, "kv_pos": kv_pos}
+
+
+# ---------------------------------------------------------------------------
+# State / cache
+# ---------------------------------------------------------------------------
+
+
+def _rec_state(cfg, batch):
+    r, cw = cfg.rnn_width, cfg.conv_width
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, r), dtype)}
+
+
+def _attn_state(cfg, batch, max_len):
+    W = min(cfg.window, max_len)
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {"k": jnp.zeros((batch, W, kv, dh), dtype),
+            "v": jnp.zeros((batch, W, kv, dh), dtype),
+            "kv_pos": jnp.full((batch, W), -1, jnp.int32)}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    n_super, n_tail = _pattern_counts(cfg)
+    stack = lambda n, f: jax.tree.map(
+        lambda *xs: jnp.stack(xs), *([f()] * n)) if n else None
+    cache = {
+        "super": {
+            "rec1": stack(n_super, lambda: _rec_state(cfg, batch)),
+            "rec2": stack(n_super, lambda: _rec_state(cfg, batch)),
+            "attn": stack(n_super, lambda: _attn_state(cfg, batch, max_len)),
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if n_tail:
+        cache["tail"] = stack(n_tail, lambda: _rec_state(cfg, batch))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _forward_body(params, cfg, x, positions, cache, *, collect_kv: bool):
+    """Shared train/prefill path. cache provides initial rec states."""
+    B = x.shape[0]
+    n_super, n_tail = _pattern_counts(cfg)
+
+    def super_body(h, xs):
+        sp, st = xs
+        h, st1 = rec_layer(sp["rec1"], cfg, h, st["rec1"], single=False)
+        h, st2 = rec_layer(sp["rec2"], cfg, h, st["rec2"], single=False)
+        h, k, v = attn_layer_full(sp["attn"], cfg, h, positions)
+        out = {"rec1": st1, "rec2": st2}
+        if collect_kv:  # only prefill needs the KV tensors (train drops them)
+            out.update(k=k, v=v)
+        return h, out
+
+    body = jax.checkpoint(super_body) if cfg.remat else super_body
+    init_st = {"rec1": cache["super"]["rec1"], "rec2": cache["super"]["rec2"]}
+    x, outs = jax.lax.scan(body, x, (params["super"], init_st))
+
+    tail_states = None
+    if n_tail:
+        def tail_body(h, xs):
+            lp, st = xs
+            h, st = rec_layer(lp, cfg, h, st, single=False)
+            return h, st
+        tb = jax.checkpoint(tail_body) if cfg.remat else tail_body
+        x, tail_states = jax.lax.scan(tb, x, (params["tail"], cache["tail"]))
+    return x, outs, tail_states
+
+
+def forward(params, cfg, tokens) -> Tuple[jax.Array, jax.Array]:
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma-style scaling
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    cache = init_cache(cfg, B, max_len=cfg.window)
+    x, _, _ = _forward_body(params, cfg, x, positions, cache, collect_kv=False)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    if cfg.vocab_padded != cfg.vocab:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg, tokens, max_len: int):
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    cache0 = init_cache(cfg, B, max_len)
+    x, outs, tail_states = _forward_body(params, cfg, x, positions, cache0,
+                                         collect_kv=True)
+    W = min(cfg.window, max_len)
+    # build ring caches from the last W tokens of each superblock's k/v
+    k = outs["k"][:, :, -W:] if T >= W else jnp.pad(
+        outs["k"], ((0, 0), (0, 0), (0, W - T), (0, 0), (0, 0)))
+    v = outs["v"][:, :, -W:] if T >= W else jnp.pad(
+        outs["v"], ((0, 0), (0, 0), (0, W - T), (0, 0), (0, 0)))
+    if T >= W:
+        kept = jnp.arange(T - W, T, dtype=jnp.int32)
+    else:
+        kept = jnp.concatenate([jnp.arange(T, dtype=jnp.int32),
+                                jnp.full((W - T,), -1, jnp.int32)])
+    slots = jnp.where(kept >= 0, kept % W, jnp.arange(W) % W)
+    order = jnp.argsort(slots)
+    k = k[:, :, order]
+    v = v[:, :, order]
+    kv_pos = jnp.broadcast_to(kept[order][None], (B, W))
+    cache = {
+        "super": {"rec1": outs["rec1"], "rec2": outs["rec2"],
+                  "attn": {"k": k, "v": v,
+                           "kv_pos": jnp.broadcast_to(kv_pos[None], (k.shape[0], B, W))}},
+        "pos": jnp.asarray(T, jnp.int32),
+    }
+    if tail_states is not None:
+        cache["tail"] = tail_states
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"])[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token):
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def super_body(h, xs):
+        sp, st = xs
+        h, st1 = rec_layer(sp["rec1"], cfg, h, st["rec1"], single=True)
+        h, st2 = rec_layer(sp["rec2"], cfg, h, st["rec2"], single=True)
+        h, attn_st = attn_layer_decode(sp["attn"], cfg, h, pos, st["attn"])
+        return h, {"rec1": st1, "rec2": st2, "attn": attn_st}
+
+    x, new_super = jax.lax.scan(super_body, x, (params["super"], cache["super"]))
+    new_cache = {"super": new_super, "pos": pos + 1}
+    if "tail" in cache:
+        def tail_body(h, xs):
+            lp, st = xs
+            h, st = rec_layer(lp, cfg, h, st, single=True)
+            return h, st
+        x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits, new_cache

@@ -1,0 +1,282 @@
+"""RWKV6 (Finch) — attention-free LM with data-dependent per-channel decay.
+
+Recurrence (per head; S is a (d_k, d_v) state matrix):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t S_{t-1} + (r_t . (u ⊙ k_t)) v_t
+
+with w_t = exp(-exp(w0 + tanh(x_w A) B)) (data-dependent decay, LoRA-param).
+
+Training/prefill use a chunk-parallel scan (chunk length cfg.rwkv_chunk):
+inter-chunk state is carried by lax.scan; intra-chunk interactions use the
+relative-decay matrix D[i,s] = exp(p_i - p_{s+1}) which is always <= 1
+(numerically safe — no exp of positive cumsums).  The Pallas kernel in
+``repro.kernels.rwkv6_scan`` implements the same chunk algorithm for TPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models import layers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_layer(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H, dh = cfg.n_heads, cfg.head_size
+    lora = cfg.decay_lora
+    ks = jax.random.split(key, 12)
+    uniform = lambda k, shape: jax.random.uniform(k, shape, jnp.float32).astype(dtype)
+    return {
+        "ln1_w": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+        "ln2_w": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+        # time mix
+        "mu": uniform(ks[0], (5, d)),  # r,k,v,g,w interpolation factors
+        "wr": layers.dense_init(ks[1], (d, d), dtype),
+        "wk": layers.dense_init(ks[2], (d, d), dtype),
+        "wv": layers.dense_init(ks[3], (d, d), dtype),
+        "wg": layers.dense_init(ks[4], (d, d), dtype),
+        "wo": layers.dense_init(ks[5], (d, d), dtype,
+                                scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.3 - 0.6).astype(dtype),
+        "wA": layers.dense_init(ks[7], (d, lora), dtype),
+        "wB": (jax.random.normal(ks[8], (lora, d), jnp.float32) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (H, dh), jnp.float32) * 0.3).astype(dtype),
+        "gn_w": jnp.ones((d,), dtype), "gn_b": jnp.zeros((d,), dtype),
+        # channel mix
+        "mu_c": uniform(ks[10], (2, d)),  # k, r
+        "wk_c": layers.dense_init(ks[11], (d, f), dtype),
+        "wv_c": layers.dense_init(jax.random.fold_in(key, 99), (f, d), dtype,
+                                  scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        "wr_c": layers.dense_init(jax.random.fold_in(key, 98), (d, d), dtype),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    dtype = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": layers.embed_init(k1, (cfg.vocab_padded, cfg.d_model), dtype),
+        "ln0_w": jnp.ones((cfg.d_model,), dtype), "ln0_b": jnp.zeros((cfg.d_model,), dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg, dtype))(keys),
+        "final_norm_w": jnp.ones((cfg.d_model,), dtype),
+        "final_norm_b": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": layers.dense_init(k3, (cfg.d_model, cfg.vocab_padded), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B, T, d); prev: (B, d) last token of previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decay_log(p, x_w):
+    """log w_t, clamped for fp32 chunk-cumsum safety. (B,T,d) -> (B,T,d)."""
+    lora = jnp.einsum("btd,dl->btl", x_w, p["wA"])
+    lora = jnp.einsum("btl,ld->btd", jnp.tanh(lora), p["wB"])
+    expo = jnp.clip(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 2.0)
+    return -jnp.exp(expo)  # in [-e^2, -e^-8]
+
+
+def wkv_chunked(r, k, v, dlog, u, state, chunk: int,
+                d_dtype_name: str = "compute"):
+    """Chunk-parallel RWKV6 core.
+
+    r,k,v: (B, T, H, K/V); dlog: (B, T, H, K) log-decay (<0); u: (H, K);
+    state: (B, H, K, V). Returns (y (B,T,H,V), state_out).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+    rc = r.reshape(B, nc, L, H, K).transpose(1, 0, 3, 2, 4)  # (nc,B,H,L,K)
+    kc = k.reshape(B, nc, L, H, K).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, L, H, V).transpose(1, 0, 3, 2, 4)
+    dc = dlog.reshape(B, nc, L, H, K).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    # anchor the scan inputs and carry: without these, GSPMD replicates
+    # the chunk-scan carry (state S) and all-gathers per chunk iteration
+    rc = constrain(rc, None, "batch", "heads", None, None)
+    kc = constrain(kc, None, "batch", "heads", None, None)
+    vc = constrain(vc, None, "batch", "heads", None, None)
+    dc = constrain(dc, None, "batch", "heads", None, None)
+    state = constrain(state, "batch", "heads", None, None)
+
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)  # strictly lower (s < i)
+
+    # the intra-chunk decay tensor D is (B,H,L,L,K) — by far the largest
+    # intermediate of the XLA path (the Pallas kernel keeps it in VMEM).
+    # Materializing it in the compute dtype (bf16 on TPU) halves its HBM
+    # traffic; the contraction still accumulates in fp32.
+    d_dtype = r.dtype if d_dtype_name == "compute" else jnp.float32
+
+    def chunk_step(S, xs):
+        rb, kb, vb, db = xs  # (B,H,L,K/V)
+        rb32, kb32, vb32 = (a.astype(jnp.float32) for a in (rb, kb, vb))
+        p = jnp.cumsum(db, axis=2) - db  # exclusive cumsum: p_i = sum_{j<i}
+        p_end = p[:, :, -1] + db[:, :, -1]  # (B,H,K) total decay
+        # inter-chunk contribution
+        r_dec = rb32 * jnp.exp(p)
+        y_inter = jnp.einsum("bhlk,bhkv->bhlv", r_dec, S)
+        # intra-chunk: D[i,s] = exp(p_i - p_s - d_s) (<=1 for s<i)
+        D = jnp.exp(p[:, :, :, None, :]
+                    - (p + db)[:, :, None, :, :]).astype(d_dtype)
+        A = jnp.einsum("bhik,bhsk,bhisk->bhis",
+                       rb.astype(d_dtype), kb.astype(d_dtype), D,
+                       preferred_element_type=jnp.float32)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhis,bhsv->bhiv", A, vb32)
+        # current-token bonus
+        diag = jnp.einsum("bhik,hk,bhik->bhi", rb32, u.astype(jnp.float32), kb32)
+        y = y_inter + y_intra + diag[..., None] * vb32
+        # state update
+        k_dec = kb32 * jnp.exp(p_end[:, :, None, :] - (p + db))
+        S_new = jnp.exp(p_end)[..., None] * S + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_dec, vb32)
+        return S_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                             (rc, kc, vc, dc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, V)
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, dlog, u, state):
+    """Single-token recurrence. r,k,v: (B,H,K/V); state: (B,H,K,V) fp32."""
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    y = jnp.einsum("bhk,bhkv->bhv", r32, state)
+    bonus = jnp.einsum("bhk,hk,bhk->bh", r32, u.astype(jnp.float32), k32)
+    y = y + bonus[..., None] * v32
+    state = jnp.exp(dlog.astype(jnp.float32))[..., None] * state + \
+        k32[..., None] * v32[..., None, :]
+    return y.astype(r.dtype), state
+
+
+def time_mix(p, cfg, x, tm_prev, state, *, single: bool):
+    """x: (B,T,d) (T=1 if single). Returns (out, new_tm_prev, new_state)."""
+    B, T, d = x.shape
+    H, dh = cfg.n_heads, cfg.head_size
+    xs = _token_shift(x, tm_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i][None, None] * (xs - x) for i in range(5))
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(B, T, H, dh)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(B, T, H, dh)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(B, T, H, dh)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+    dlog = _decay_log(p, xw).reshape(B, T, H, dh)
+    if single:
+        y, state = wkv_step(r[:, 0], k[:, 0], v[:, 0], dlog[:, 0], p["u"], state)
+        y = y[:, None]
+    else:
+        y, state = wkv_chunked(r, k, v, dlog, p["u"], state, cfg.rwkv_chunk,
+                               d_dtype_name=cfg.rwkv_d_dtype)
+    y = y.reshape(B, T, d)
+    y = layers.group_norm_heads(y, p["gn_w"], p["gn_b"], H, eps=1e-5)
+    out = jnp.einsum("btd,de->bte", y * g, p["wo"])
+    return out, x[:, -1], state
+
+
+def channel_mix(p, cfg, x, cm_prev):
+    xs = _token_shift(x, cm_prev)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + mu[0][None, None] * (xs - x)
+    xr = x + mu[1][None, None] * (xs - x)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk_c"])))
+    out = jnp.einsum("btf,fd->btd", k, p["wv_c"])
+    rgate = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr_c"]))
+    return rgate * out, x[:, -1]
+
+
+def block(p, cfg, x, st, *, single: bool):
+    """st: dict(tm_prev (B,d), cm_prev (B,d), S (B,H,K,V))."""
+    h, tm_prev, S = time_mix(
+        p, cfg, layers.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps),
+        st["tm_prev"], st["S"], single=single)
+    x = x + h
+    h, cm_prev = channel_mix(
+        p, cfg, layers.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps),
+        st["cm_prev"])
+    x = x + h
+    return x, {"tm_prev": tm_prev, "cm_prev": cm_prev, "S": S}
+
+
+def init_state(cfg, batch: int) -> dict:
+    H, dh = cfg.n_heads, cfg.head_size
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {
+        "tm_prev": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        "cm_prev": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        "S": jnp.zeros((cfg.n_layers, batch, H, dh, dh), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _run_layers(params, cfg, x, state, *, single: bool):
+    def body(h, xs):
+        lp, st = xs
+        h, st_new = block(lp, cfg, h, st, single=single)
+        return h, st_new
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and not single) else body
+    layer_state = {k: state[k] for k in ("tm_prev", "cm_prev", "S")}
+    x, new_state = jax.lax.scan(body_fn, x, (params["layers"], layer_state))
+    return x, new_state
+
+
+def forward(params, cfg, tokens) -> Tuple[jax.Array, jax.Array]:
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = layers.layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+    state = init_state(cfg, B)
+    x, _ = _run_layers(params, cfg, x, state, single=False)
+    x = layers.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                          cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def _unembed(params, cfg, x):
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    del max_len  # constant-size state — that's the point of an SSM
+    return init_state(cfg, batch)
+
+
+def prefill(params, cfg, tokens, max_len: int):
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = layers.layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+    state = init_state(cfg, B)
+    x, new_state = _run_layers(params, cfg, x, state, single=False)
+    x = layers.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                          cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:])[:, 0]
+    new_state["pos"] = jnp.asarray(T, jnp.int32)
+    return logits, new_state
+
+
+def decode_step(params, cfg, cache, token):
+    B = token.shape[0]
+    x = params["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))
+    x = layers.layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+    x, new_state = _run_layers(params, cfg, x, cache, single=True)
+    x = layers.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                          cfg.norm_eps)
+    logits = _unembed(params, cfg, x)[:, 0]
+    new_state["pos"] = cache["pos"] + 1
+    return logits, new_state

@@ -1,0 +1,166 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment)
+— the latter keeps the 132B/1T MoE configs inside v5e HBM budgets.
+
+Pure-pytree API (no external deps):
+    opt = make_optimizer(cfg_like)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(prog, 0.0, 1.0)))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm,
+                                   0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    config: OptimizerConfig
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(cfg, step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # decay matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(tdef, [o[i] for o in outs])
+        return unf(0), {"m": unf(1), "v": unf(2)}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (no momentum; factored second moment for >=2-D params)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and min(p.shape[-2:]) >= 2
+
+
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(cfg, step)
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - jnp.power(t, -cfg.decay_rate)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": vhat}
+            delta = g / (jnp.sqrt(vhat) + 1e-30)
+            # update clipping (adafactor RMS rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update, cfg)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    cfg = OptimizerConfig(name=name, **kw)
+    if name == "adamw":
+        return make_adamw(cfg)
+    if name == "adafactor":
+        return make_adafactor(cfg)
+    raise ValueError(name)

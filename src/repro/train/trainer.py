@@ -1,0 +1,121 @@
+"""Production trainer: jitted step, checkpoint/restart, straggler
+detection, preemption safety.
+
+    trainer = Trainer(model_cfg, TrainerConfig(...), mesh=mesh)
+    state = trainer.init_or_restore(rng)
+    state = trainer.run(state, data_iter)
+
+Fault-tolerance contract: checkpoints every ``ckpt_every`` steps and on
+SIGTERM (preemption); ``init_or_restore`` resumes from the newest manifest;
+``elastic_restart`` re-places the restored state on a smaller healthy mesh
+(see distributed.fault_tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_lib
+from repro.distributed.api import MeshPolicy
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.launch import steps as steps_lib
+from repro.models import model as model_lib
+from repro.train import checkpoint, optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    straggler_z: float = 4.0
+    on_straggler: str = "log"   # log | raise
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, cfg: TrainerConfig,
+                 mesh=None, log_fn: Callable = print):
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.mesh = mesh
+        self.log_fn = log_fn
+        self.opt = opt_lib.make_optimizer(
+            model_cfg.optimizer, peak_lr=cfg.peak_lr,
+            warmup_steps=cfg.warmup_steps, total_steps=cfg.total_steps)
+        policy = None
+        if mesh is not None:
+            policy = MeshPolicy(mesh, shard_lib.activation_rules(
+                mesh, train=True))
+        self._step_fn = jax.jit(steps_lib.make_train_step(
+            model_cfg, self.opt, policy), donate_argnums=0)
+        self.straggler = StragglerDetector(z_threshold=cfg.straggler_z)
+        self._preempted = False
+
+    # ------------------------------------------------------------------
+    def init_state(self, rng) -> dict:
+        params = model_lib.init_params(rng, self.model_cfg)
+        if self.mesh is not None:
+            shapes = jax.eval_shape(lambda t: t, params)
+            shards = shard_lib.shard_params_specs(shapes, self.mesh, train=True)
+            params = jax.tree.map(jax.device_put, params, shards)
+        return {"params": params, "opt": self.opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def init_or_restore(self, rng) -> dict:
+        state = self.init_state(rng)
+        if self.cfg.ckpt_dir and checkpoint.latest_step(self.cfg.ckpt_dir) is not None:
+            restored = checkpoint.restore(self.cfg.ckpt_dir, state)
+            self.log_fn(f"[trainer] restored step {int(restored['step'])}")
+            return restored
+        return state
+
+    # ------------------------------------------------------------------
+    def _install_sigterm(self, state_ref):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not main thread
+
+    def run(self, state: dict, data: Iterator[dict],
+            hooks: Optional[dict] = None) -> dict:
+        cfg = self.cfg
+        self._install_sigterm(state)
+        start = int(state["step"])
+        for step in range(start, cfg.total_steps):
+            t0 = time.time()
+            batch = next(data) if hasattr(data, "__next__") else data.batch(step)
+            state, metrics = self._step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            if self.straggler.update(dt):
+                self.log_fn(f"[trainer] STRAGGLER step={step} dt={dt:.2f}s "
+                            f"(mean {self.straggler.mean:.2f}s)")
+                if cfg.on_straggler == "raise":
+                    raise RuntimeError(f"straggler at step {step}")
+            if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                self.log_fn(f"[trainer] step={step} "
+                            f"loss={float(metrics['loss']):.4f} "
+                            f"gnorm={float(metrics['grad_norm']):.3f} "
+                            f"dt={dt*1000:.0f}ms")
+            should_ckpt = cfg.ckpt_dir and (
+                (step + 1) % cfg.ckpt_every == 0 or self._preempted
+                or step == cfg.total_steps - 1)
+            if should_ckpt:
+                path = checkpoint.save(cfg.ckpt_dir, step + 1, state,
+                                       keep_last=cfg.keep_last)
+                if self._preempted:
+                    self.log_fn(f"[trainer] preempted; saved {path}")
+                    return state
+        return state

@@ -1,0 +1,130 @@
+"""Environment invariants (iteration-level scheduling engine + MDP)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import features
+from repro.env import engine, env as env_lib
+from repro.env.env import EnvConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = EnvConfig()
+    pool = env_lib.make_env_pool(cfg)
+    return cfg, pool
+
+
+def _rollout(cfg, pool, n, policy="rr", seed=0):
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(seed))
+
+    @functools.partial(jax.jit, static_argnums=())
+    def run(state):
+        def body(st, i):
+            if policy == "rr":
+                a = (i % cfg.n_experts) + 1
+            else:
+                a = jnp.zeros((), jnp.int32)
+            st, r, info = env_lib.step(cfg, pool, st, a)
+            return st, (r, info["penalty"])
+        return jax.lax.scan(body, state, jnp.arange(n))
+
+    return run(state)
+
+
+def test_request_conservation(setup):
+    """Every arrival is completed, in-system, or dropped — nothing leaks.
+
+    (`routed` counts action>0 even when the target waiting queue is full —
+    those requests land in `dropped`, so the conservation law is
+    done + in_system + dropped == arrivals.)"""
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 800)
+    s = state["stats"]
+    q = state["queues"]
+    in_system = int(jnp.sum(q["run_valid"])) + int(jnp.sum(q["wait_valid"]))
+    assert int(s["done"]) + in_system + int(s["dropped"]) == 800
+
+
+def test_memory_constraint_at_admission(setup):
+    """Resident KV bytes never exceed capacity by more than one request's
+    decode growth (admission-gated, vLLM-style growth allowed)."""
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 800)
+    used = engine.mem_used(state["queues"], pool.mem_per_token)
+    slack = pool.max_output * pool.mem_per_token * cfg.run_cap
+    assert bool(jnp.all(used <= pool.mem_capacity + slack))
+
+
+def test_clocks_monotone_and_reach_arrivals(setup):
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 300)
+    assert bool(jnp.all(state["expert_clock"] >= state["clock"] - 1e-3))
+
+
+def test_drop_everything_completes_nothing(setup):
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 200, policy="drop")
+    assert int(state["stats"]["done"]) == 0
+    assert int(state["stats"]["dropped"]) == 200
+
+
+def test_qos_bounded(setup):
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 800)
+    m = env_lib.episode_metrics(state)
+    assert 0.0 <= m["avg_qos"] <= 1.0
+    assert m["avg_qos"] <= m["avg_score"] + 1e-6  # indicator only shrinks
+
+
+def test_impact_penalty_increases_with_load(setup):
+    """Action impact estimator (Eq. 15): routing into a loaded expert must
+    never yield a smaller penalty than into an empty one."""
+    cfg, pool = setup
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(1))
+    # load expert 1 heavily
+    for _ in range(10):
+        state, _, _ = env_lib.step(cfg, pool, state, jnp.asarray(1))
+    q = state["queues"]
+    loaded = int(jnp.argmax(jnp.sum(q["run_valid"], -1)))
+    empty = int(jnp.argmin(jnp.sum(q["run_valid"], -1)
+                           + jnp.sum(q["wait_valid"], -1)))
+    pen_loaded = float(env_lib.impact_penalty(
+        cfg, pool, state, jnp.asarray(loaded + 1)))
+    pen_empty = float(env_lib.impact_penalty(
+        cfg, pool, state, jnp.asarray(empty + 1)))
+    assert pen_loaded >= pen_empty
+    assert float(env_lib.impact_penalty(cfg, pool, state,
+                                        jnp.asarray(0))) == 0.0
+
+
+def test_obs_shapes_and_masks(setup):
+    cfg, pool = setup
+    state, _ = _rollout(cfg, pool, 50)
+    obs = features.build_obs(cfg, pool, state)
+    N, R, W = cfg.n_experts, cfg.run_cap, cfg.wait_cap
+    assert obs["expert"].shape == (N, features.EXP_FEATS)
+    assert obs["run"].shape == (N, R, features.REQ_FEATS)
+    assert obs["wait"].shape == (N, W, features.REQ_FEATS)
+    assert obs["arrived"].shape == (features.REQ_FEATS,)
+    # masked slots carry zero features
+    masked = jnp.where(obs["run_mask"][..., None], 0.0, obs["run"])
+    assert float(jnp.max(jnp.abs(masked))) == 0.0
+    assert bool(jnp.all(jnp.isfinite(obs["expert"])))
+
+
+def test_realworld_rate_normalization():
+    from repro.env import workload
+    cfg = workload.WorkloadConfig(kind="realworld", rate=5.0)
+    state = workload.init_state()
+    # long-run average of sampled rates ~ rate
+    t = jnp.asarray(0.0)
+    key = jax.random.PRNGKey(0)
+    total = 0.0
+    n = 3000
+    for i in range(5):  # sample the rate at scattered times/burst states
+        r = workload.current_rate(cfg, state, jnp.asarray(float(i * 37)))
+        total += float(r)
+    assert 1.0 < total / 5 < 12.0

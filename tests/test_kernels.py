@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c: per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+key = jax.random.PRNGKey(0)
+kk = lambda i: jax.random.fold_in(key, i)
+
+
+# --------------------------- flash attention -------------------------------
+
+FLASH_SHAPES = [
+    # B, H, KV, S, dh, causal, window
+    (2, 4, 2, 128, 64, True, 0),
+    (1, 8, 1, 96, 64, True, 0),      # MQA, ragged S
+    (2, 4, 4, 160, 128, True, 64),   # SWA
+    (1, 2, 2, 64, 32, False, 0),     # bidirectional (encoder)
+    (1, 6, 3, 80, 16, True, 0),      # odd groups
+]
+
+
+@pytest.mark.parametrize("B,H,KV,S,dh,causal,window", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, KV, S, dh, causal, window, dtype):
+    from repro.kernels.flash_attn.ops import flash_attn
+    from repro.kernels.flash_attn.ref import attention_ref
+    q = jax.random.normal(kk(1), (B, H, S, dh), dtype)
+    k = jax.random.normal(kk(2), (B, KV, S, dh), dtype)
+    v = jax.random.normal(kk(3), (B, KV, S, dh), dtype)
+    out = flash_attn(q, k, v, causal=causal, window=window,
+                     block_q=32, block_kv=32)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+# --------------------------- decode attention ------------------------------
+
+DECODE_SHAPES = [(2, 8, 2, 512, 64), (3, 4, 4, 300, 128), (1, 16, 1, 64, 64)]
+
+
+@pytest.mark.parametrize("B,H,KV,S,dh", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, KV, S, dh, dtype):
+    from repro.kernels.decode_attn.ops import decode_attn
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+    q = jax.random.normal(kk(4), (B, H, dh), dtype)
+    k = jax.random.normal(kk(5), (B, KV, S, dh), dtype)
+    v = jax.random.normal(kk(6), (B, KV, S, dh), dtype)
+    lengths = jax.random.randint(kk(7), (B,), 1, S + 1)
+    out = decode_attn(q, k, v, lengths, block_kv=128)
+    ref = decode_attention_ref(q, k, v, lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+# ------------------------------- rwkv6 -------------------------------------
+
+@pytest.mark.parametrize("B,H,T,K,chunk", [(2, 3, 64, 32, 16),
+                                           (1, 2, 96, 64, 32),
+                                           (1, 1, 40, 16, 16)])
+def test_rwkv6_scan(B, H, T, K, chunk):
+    from repro.kernels.rwkv6_scan.ops import wkv
+    from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+    r = jax.random.normal(kk(8), (B, H, T, K)) * 0.5
+    k = jax.random.normal(kk(9), (B, H, T, K)) * 0.5
+    v = jax.random.normal(kk(10), (B, H, T, K))
+    dlog = -jnp.exp(jnp.clip(jax.random.normal(kk(11), (B, H, T, K)), -3, 1))
+    u = jax.random.normal(kk(12), (H, K)) * 0.3
+    out = wkv(r, k, v, dlog, u, chunk=chunk)
+    ref = rwkv6_scan_ref(r, k, v, dlog, u)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+def test_rwkv6_matches_model_layer():
+    """The kernel and the model's chunked jnp implementation agree."""
+    from repro.kernels.rwkv6_scan.ops import wkv
+    from repro.models import rwkv6 as m
+    B, H, T, K = 2, 2, 64, 16
+    r = jax.random.normal(kk(13), (B, T, H, K)) * 0.5
+    k = jax.random.normal(kk(14), (B, T, H, K)) * 0.5
+    v = jax.random.normal(kk(15), (B, T, H, K))
+    dlog = -jnp.exp(jnp.clip(jax.random.normal(kk(16), (B, T, H, K)), -3, 1))
+    u = jax.random.normal(kk(17), (H, K)) * 0.3
+    y_model, _ = m.wkv_chunked(r, k, v, dlog, u,
+                               jnp.zeros((B, H, K, K)), chunk=16)
+    y_kernel = wkv(r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                   v.transpose(0, 2, 1, 3), dlog.transpose(0, 2, 1, 3),
+                   u, chunk=16).transpose(0, 2, 1, 3)
+    assert float(jnp.max(jnp.abs(y_model - y_kernel))) < 1e-3
+
+
+# ------------------------------- rglru -------------------------------------
+
+@pytest.mark.parametrize("B,T,W,bt,bw", [(2, 128, 256, 64, 128),
+                                         (1, 200, 512, 128, 512),
+                                         (3, 64, 128, 32, 64)])
+def test_rglru_scan(B, T, W, bt, bw):
+    from repro.kernels.rglru_scan.ops import lru
+    from repro.kernels.rglru_scan.ref import rglru_scan_ref
+    log_a = -jnp.exp(jax.random.normal(kk(18), (B, T, W)))
+    b = jax.random.normal(kk(19), (B, T, W))
+    h0 = jax.random.normal(kk(20), (B, W))
+    out = lru(log_a, b, h0, block_t=bt, block_w=bw)
+    ref = rglru_scan_ref(log_a, b, h0)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+# ------------------------------ moe gemm -----------------------------------
+
+@pytest.mark.parametrize("E,C,D,F", [(4, 128, 256, 128), (2, 256, 512, 256),
+                                     (8, 128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_grouped_gemm(E, C, D, F, dtype):
+    from repro.kernels.moe_gemm.ops import expert_gemm, expert_swiglu
+    from repro.kernels.moe_gemm.ref import grouped_gemm_ref, grouped_swiglu_ref
+    x = (jax.random.normal(kk(21), (E, C, D)) * 0.1).astype(dtype)
+    w = (jax.random.normal(kk(22), (E, D, F)) * 0.1).astype(dtype)
+    wu = (jax.random.normal(kk(23), (E, D, F)) * 0.1).astype(dtype)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    e1 = jnp.max(jnp.abs(expert_gemm(x, w).astype(jnp.float32)
+                         - grouped_gemm_ref(x, w).astype(jnp.float32)))
+    e2 = jnp.max(jnp.abs(expert_swiglu(x, w, wu).astype(jnp.float32)
+                         - grouped_swiglu_ref(x, w, wu).astype(jnp.float32)))
+    assert float(e1) < tol and float(e2) < tol
+
+
+def test_pallas_attn_impl_in_model():
+    """attn_impl='pallas' (interpret mode on CPU) matches the XLA path."""
+    import dataclasses
+
+    from repro.configs import get_config, reduce_config
+    from repro.models import model
+    cfg_x = reduce_config(get_config("qwen1.5-0.5b"))
+    cfg_p = dataclasses.replace(cfg_x, attn_impl="pallas")
+    params = model.init_params(jax.random.PRNGKey(0), cfg_x)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg_x.vocab)
+    lx, _ = model.forward(params, cfg_x, toks)
+    lp, _ = model.forward(params, cfg_p, toks)
+    assert float(jnp.max(jnp.abs(lx - lp))) < 5e-4

@@ -1,0 +1,117 @@
+"""Multi-device SPMD tests (subprocess with forced host devices so the
+main pytest process keeps its single-device view)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 520) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_moe_sharded_matches_local():
+    run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.configs import get_config, reduce_config
+        from repro.models import moe
+        from repro.distributed.api import MeshPolicy, use_mesh_policy
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = reduce_config(get_config("dbrx-132b"), capacity_factor=8.0)
+        key = jax.random.PRNGKey(0)
+        params = moe.init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (64, cfg.d_model))
+        out_local, aux_local = moe.moe_block(params, x, cfg)
+        policy = MeshPolicy(mesh, {})
+        with mesh:
+            with use_mesh_policy(policy):
+                out_shard, aux_shard = jax.jit(
+                    lambda p, x: moe.moe_block(p, x, cfg))(params, x)
+        err = float(jnp.max(jnp.abs(out_local - out_shard)))
+        # local capacity differs from global capacity -> tiny drop diffs
+        # are possible; with capacity_factor=8 nothing drops
+        assert err < 2e-3, err
+        print("moe sharded ok", err)
+    """)
+
+
+def test_train_step_on_mesh_runs():
+    run_py("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, reduce_config
+        from repro.launch import steps
+        from repro.launch.mesh import make_host_mesh
+        from repro.train import optimizer as opt_lib
+        from repro.models import model
+        from repro.distributed import sharding
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = reduce_config(get_config("qwen1.5-0.5b"),
+                            d_model=64, n_heads=4, n_kv_heads=2, d_head=16)
+        opt = opt_lib.make_optimizer("adamw", total_steps=4)
+        with mesh:
+            params = model.init_params(jax.random.PRNGKey(0), cfg)
+            shapes = jax.eval_shape(lambda t: t, params)
+            shards = sharding.shard_params_specs(shapes, mesh, train=True)
+            params = jax.tree.map(jax.device_put, params, shards)
+            state = {"params": params, "opt": opt.init(params),
+                     "step": jnp.zeros((), jnp.int32)}
+            from repro.distributed.api import MeshPolicy
+            pol = MeshPolicy(mesh, sharding.activation_rules(mesh, train=True))
+            fn = jax.jit(steps.make_train_step(cfg, opt, pol))
+            batch = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)}
+            state, m = fn(state, batch)
+            assert bool(jnp.isfinite(m["loss"]))
+            print("mesh train ok", float(m["loss"]))
+    """)
+
+
+def test_collectives_multidevice():
+    run_py("""
+        import jax, jax.numpy as jnp
+        from repro.distributed import collectives
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+        want = jnp.sum(x, axis=0)
+        got = collectives.ring_allreduce(x, mesh, "data")
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-4, err
+        # compressed allreduce: mean with int8 error bound
+        tree = {"g": jax.random.normal(jax.random.PRNGKey(1), (512,))}
+        avg, res = collectives.compressed_allreduce(tree, mesh, "data")
+        # replicated input -> mean == input, error bounded by quant step
+        err2 = float(jnp.max(jnp.abs(avg["g"] - tree["g"])))
+        bound = float(jnp.max(jnp.abs(tree["g"]))) / 127 + 1e-6
+        assert err2 <= bound, (err2, bound)
+        print("collectives ok", err, err2)
+    """)
+
+
+def test_dryrun_tiny_cell_both_meshes():
+    """The dry-run machinery lowers+compiles on 512 fake devices (the real
+    deliverable runs every cell; here one cheap cell per mesh as a test)."""
+    run_py("""
+        from repro.launch.dryrun import run_cell
+        rec = run_cell("qwen1.5-0.5b", "decode_32k", multi_pod=False,
+                       out_dir="")
+        assert rec["ok"], rec.get("error")
+        rec2 = run_cell("qwen1.5-0.5b", "decode_32k", multi_pod=True,
+                        out_dir="")
+        assert rec2["ok"], rec2.get("error")
+        print("dryrun tiny ok")
+    """, devices=512)

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models import layers
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    B=st.integers(1, 2),
+    S=st.integers(3, 48),
+    H=st.sampled_from([2, 4, 6]),
+    kv_div=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 5, 16]),
+    bq=st.sampled_from([4, 8, 16]),
+)
+def test_blockwise_attention_matches_plain(B, S, H, kv_div, dh, causal,
+                                           window, bq):
+    if H % kv_div:
+        return
+    KV = H // kv_div
+    key = jax.random.PRNGKey(B * 1000 + S)
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, dh))
+    if not causal and window:
+        window = 0  # window only defined for causal here
+    a = layers.blockwise_attention(q, k, v, causal=causal, window=window,
+                                   block_q=bq, block_kv=bq * 2)
+    b = layers.plain_attention(q, k, v, causal=causal, window=window)
+    if not causal:
+        mask_ok = True
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(x=st.lists(st.floats(-100, 100), min_size=1, max_size=300),
+       block=st.sampled_from([16, 64, 256]))
+def test_int8_quantization_error_bound(x, block):
+    from repro.distributed.collectives import _dequantize_int8, _quantize_int8
+    v = jnp.asarray(x, jnp.float32)
+    q, scale, n = _quantize_int8(v, block)
+    deq = _dequantize_int8(q, scale, n)
+    # per-block error bounded by scale/2 = max|x|/254
+    err = np.asarray(jnp.abs(deq - v))
+    bound = float(jnp.max(jnp.abs(v))) / 127.0 + 1e-6
+    assert err.max() <= bound
+
+
+@given(s=st.floats(0, 1), d=st.floats(1, 300))
+def test_bucketization_bounds(s, d):
+    from repro.env.env import EnvConfig, bucketize_len, bucketize_score
+    cfg = EnvConfig()
+    bs = float(bucketize_score(cfg, jnp.asarray(s, jnp.float32)))
+    bd = float(bucketize_len(cfg, jnp.asarray(d, jnp.float32)))
+    assert 0.0 <= bs <= 1.0
+    assert 0.0 <= bd <= cfg.max_output
+    assert abs(bs - s) <= 0.5 / cfg.n_buckets + 1e-6
+    assert abs(bd - d) <= 0.5 * cfg.max_output / cfg.n_buckets + 1e-6
+
+
+@given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 1000))
+def test_data_pipeline_deterministic(seed, step):
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=4, seed=seed % 17)
+    d1 = SyntheticLM(cfg).batch(step)["tokens"]
+    d2 = SyntheticLM(cfg).batch(step)["tokens"]
+    assert jnp.array_equal(d1, d2)
+    assert d1.shape == (4, 8)
+    assert bool(jnp.all((d1 >= 0) & (d1 < 64)))
+
+
+@given(n=st.integers(1, 40), r=st.integers(1, 6), w=st.integers(1, 6))
+def test_empty_queue_invariants(n, r, w):
+    from repro.env import engine
+    q = engine.empty_queues(n, r, w)
+    assert q["run_valid"].shape == (n, r)
+    assert not bool(jnp.any(q["run_valid"]))
+    assert not bool(jnp.any(q["wait_valid"]))
+
+
+@given(
+    lam=st.floats(0.5, 20.0),
+    kind=st.sampled_from(["poisson", "realworld"]),
+    seed=st.integers(0, 1000),
+)
+def test_arrivals_positive(lam, kind, seed):
+    from repro.env import workload
+    cfg = workload.WorkloadConfig(kind=kind, rate=lam)
+    state = workload.init_state()
+    dt, state = workload.next_arrival(cfg, state, jnp.asarray(1.0),
+                                      jax.random.PRNGKey(seed))
+    assert float(dt) >= 0.0
+
+
+@given(perm_seed=st.integers(0, 100))
+def test_han_expert_permutation_equivariance(perm_seed):
+    """Permuting expert order must permute expert embeddings and leave the
+    arrived-request embedding unchanged (graph symmetry of the HAN)."""
+    from repro.core import han as han_lib
+    rng = np.random.default_rng(perm_seed)
+    N, R, W = 4, 3, 2
+    key = jax.random.PRNGKey(0)
+    params = han_lib.init_params(key)
+    obs = {
+        "expert": jax.random.normal(jax.random.fold_in(key, 1), (N, 7)),
+        "run": jax.random.normal(jax.random.fold_in(key, 2), (N, R, 6)),
+        "wait": jax.random.normal(jax.random.fold_in(key, 3), (N, W, 6)),
+        "run_mask": jax.random.bernoulli(jax.random.fold_in(key, 4), 0.6, (N, R)),
+        "wait_mask": jax.random.bernoulli(jax.random.fold_in(key, 5), 0.4, (N, W)),
+        "arrived": jax.random.normal(jax.random.fold_in(key, 6), (6,)),
+    }
+    perm = rng.permutation(N)
+    obs_p = dict(obs)
+    for k in ("expert", "run", "wait", "run_mask", "wait_mask"):
+        obs_p[k] = obs[k][perm]
+    arr1, exp1 = han_lib.forward(params, obs)
+    arr2, exp2 = han_lib.forward(params, obs_p)
+    np.testing.assert_allclose(np.asarray(arr1), np.asarray(arr2),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(exp1[perm]), np.asarray(exp2),
+                               atol=1e-5, rtol=1e-5)

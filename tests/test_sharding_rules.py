@@ -1,0 +1,68 @@
+"""Sharding rules: every parameter of every arch gets a legal spec on both
+production meshes (divisibility enforced), without touching device state
+(uses abstract Mesh via jax.eval_shape only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.distributed import sharding
+from repro.models import model
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape only (rules never touch devices)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+MESHES = {
+    "pod16x16": FakeMesh({"data": 16, "model": 16}),
+    "pod2x16x16": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+@pytest.mark.parametrize("arch", list(list_archs()))
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_param_specs_divisible(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    shapes = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+
+    def check(path, x):
+        spec = sharding.param_spec(path, x.shape, mesh, train=True)
+        assert len(spec) == len(x.shape), (path, spec, x.shape)
+        for dim, axes in zip(x.shape, spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, path, x.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes)
+
+
+def test_batch_axes_fallbacks():
+    mesh = MESHES["pod2x16x16"]
+    assert sharding.batch_axes(mesh, 256) == ("pod", "data")
+    assert sharding.batch_axes(mesh, 32) == ("pod", "data")
+    assert sharding.batch_axes(mesh, 16) == ("data",)   # largest divisible
+    assert sharding.batch_axes(mesh, 8) == ("pod",)
+    assert sharding.batch_axes(mesh, 1) is None
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-7b",
+                                  "recurrentgemma-2b", "whisper-medium"])
+def test_cache_specs_build(arch):
+    cfg = get_config(arch)
+    mesh = MESHES["pod16x16"]
+    shapes = jax.eval_shape(lambda: model.init_cache(cfg, 128, 1024))
+
+    def check(path, x):
+        spec = sharding.cache_spec(path, x.shape, mesh, 128)
+        assert len(spec) == len(x.shape)
+
+    jax.tree_util.tree_map_with_path(check, shapes)
