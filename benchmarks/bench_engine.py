@@ -1,0 +1,116 @@
+"""Microbenchmark: `advance_all` alone — lockstep packed engine vs the seed
+reference (`repro.env.engine_ref`), N ∈ {6, 16, 64}, Poisson λ=5.
+
+Each benchmark step injects one request into a round-robin expert's waiting
+queue (so the engine never drains) and advances all experts to the next
+Poisson arrival; steps/sec is the whole scan's throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.env import engine, engine_ref, profiles
+
+R, W = 5, 5
+LAT_L = 0.030
+LAM = 5.0
+REQ = {"p": 160, "d_true": 48, "score": 0.7, "pred_s": 0.7, "pred_d": 48.0}
+
+
+def _inject_packed(q, n, t):
+    q, _ = engine.push_wait(q, n, p=REQ["p"], d_true=REQ["d_true"],
+                            score=REQ["score"], pred_s=REQ["pred_s"],
+                            pred_d=REQ["pred_d"], t=t)
+    return q
+
+
+def _inject_named(q, n, t):
+    free = ~q["wait_valid"][n]
+    do = jnp.any(free)
+    slot = jnp.argmax(free)
+    set_at = lambda arr, val: arr.at[n, slot].set(
+        jnp.where(do, val, arr[n, slot]))
+    q = dict(q)
+    q["wait_valid"] = set_at(q["wait_valid"], do)
+    q["wait_p"] = set_at(q["wait_p"], jnp.asarray(REQ["p"], jnp.int32))
+    q["wait_d_true"] = set_at(q["wait_d_true"],
+                              jnp.asarray(REQ["d_true"], jnp.int32))
+    q["wait_score"] = set_at(q["wait_score"],
+                             jnp.asarray(REQ["score"], jnp.float32))
+    q["wait_pred_s"] = set_at(q["wait_pred_s"],
+                              jnp.asarray(REQ["pred_s"], jnp.float32))
+    q["wait_pred_d"] = set_at(q["wait_pred_d"],
+                              jnp.asarray(REQ["pred_d"], jnp.float32))
+    q["wait_t_arrive"] = set_at(q["wait_t_arrive"], t)
+    return q
+
+
+def _make_runner(pool, n_experts, n_steps, empty_queues, inject, advance):
+    dts = jax.random.exponential(jax.random.PRNGKey(0), (n_steps,)) / LAM
+    experts = jnp.arange(n_steps) % n_experts
+
+    @jax.jit
+    def run():
+        def step(carry, x):
+            q, clocks, t = carry
+            dt, n = x
+            q = inject(q, n.astype(jnp.int32), t)
+            t_next = t + dt
+            q, clocks, acc = advance(pool, LAT_L, q, clocks, t_next)
+            return (q, clocks, t_next), acc["done"]
+        init = (empty_queues(n_experts, R, W),
+                jnp.zeros((n_experts,), jnp.float32), jnp.float32(0.0))
+        (q, clocks, _), done = jax.lax.scan(step, init, (dts, experts))
+        return clocks, jnp.sum(done)
+
+    return run
+
+
+def _time(run, repeats: int = 3) -> float:
+    jax.block_until_ready(run())  # compile + warm up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_steps: int = 2000, json_out: bool = False) -> None:
+    for n_experts in (6, 16, 64):
+        pool = profiles.make_pool(n_experts)
+        new_run = _make_runner(pool, n_experts, n_steps,
+                               engine.empty_queues, _inject_packed,
+                               engine.advance_all)
+        ref_run = _make_runner(pool, n_experts, n_steps,
+                               engine_ref.empty_queues, _inject_named,
+                               engine_ref.advance_all)
+        new_s = _time(new_run)
+        ref_s = _time(ref_run)
+        _, done_new = new_run()
+        _, done_ref = ref_run()
+        for label, secs, done in (("lockstep", new_s, done_new),
+                                  ("seed_ref", ref_s, done_ref)):
+            common.emit(
+                f"engine/advance_all/N{n_experts}/{label}",
+                secs / n_steps * 1e6,
+                f"steps_per_s={n_steps / secs:.1f};done={float(done):.0f}")
+        common.emit(f"engine/advance_all/N{n_experts}/speedup", 0.0,
+                    f"x={ref_s / new_s:.2f}")
+    if json_out:
+        common.write_json("engine")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", action="store_true")
+    p.add_argument("--steps", type=int, default=2000)
+    args = p.parse_args()
+    run(n_steps=args.steps, json_out=args.json)

@@ -1,6 +1,7 @@
-"""Shared benchmark helpers: policy zoo construction + CSV emission."""
+"""Shared benchmark helpers: policy zoo construction + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -15,9 +16,53 @@ from repro.env import env as env_lib  # noqa: E402
 
 ROUTER_DIR = os.environ.get("REPRO_ROUTER_DIR", "experiments/routers")
 
+# rows collected since the last write_json()/drain_results() call
+_RESULTS: List[dict] = []
+
+
+def _parse_derived(derived) -> dict:
+    """Parse a 'k=v;k=v' derived string into numbers where possible."""
+    out = {}
+    if not isinstance(derived, str):
+        return {"value": derived}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v
+    return out
+
 
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RESULTS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                     "derived": _parse_derived(derived),
+                     "derived_raw": str(derived)})
+
+
+def drain_results() -> List[dict]:
+    rows = list(_RESULTS)
+    _RESULTS.clear()
+    return rows
+
+
+def write_json(suite: str, out_dir: str = ".") -> str:
+    """Write rows emitted since the last drain to BENCH_<suite>.json."""
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "results": drain_results(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+    return path
 
 
 def load_router(variant: str, env_cfg, *, quick_iters: int = 80,

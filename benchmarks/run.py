@@ -1,8 +1,10 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,roofline] [--json]
 
-Emits ``name,us_per_call,derived`` CSV on stdout.  Sections:
+Emits ``name,us_per_call,derived`` CSV on stdout; with ``--json`` each
+section additionally writes machine-readable ``BENCH_<suite>.json`` (name,
+us_per_call, parsed derived metrics) for perf-trajectory tracking.  Sections:
   fig7/fig9    routing comparison (Poisson / real-world)      bench_routing
   fig10/table2 e2e latency decomposition + component profile  bench_latency
   fig11        number-of-experts sweep                        bench_scaling
@@ -10,6 +12,7 @@ Emits ``name,us_per_call,derived`` CSV on stdout.  Sections:
   fig13        latency-requirement sweep                      bench_deadlines
   fig14/15     long-run QoS + GPU utilization                 bench_longrun
   fig16/17/18  training curves + ablations                    bench_ablation
+  engine       advance_all microbenchmark (lockstep vs seed)  bench_engine
   predictors   score/length bucket predictor accuracy         bench_predictors
   roofline     dry-run roofline terms (reads experiments/)    roofline
 """
@@ -26,6 +29,8 @@ def main() -> None:
                    help="shorter eval episodes (CI-sized)")
     p.add_argument("--only", default="",
                    help="comma-separated section filter")
+    p.add_argument("--json", action="store_true",
+                   help="write BENCH_<suite>.json per section")
     args = p.parse_args()
     only = set(args.only.split(",")) if args.only else None
     steps = 1200 if args.quick else 4000
@@ -34,35 +39,50 @@ def main() -> None:
     def want(*names):
         return only is None or any(n in only for n in names)
 
+    from benchmarks import common
+
+    def section(suite, fn):
+        common.drain_results()  # a fresh collection window per suite
+        fn()
+        if args.json:
+            common.write_json(suite)
+
     print("name,us_per_call,derived")
     t0 = time.time()
     if want("fig7", "fig9", "routing"):
         from benchmarks import bench_routing
-        bench_routing.run(n_steps=steps)
+        section("routing", lambda: bench_routing.run(n_steps=steps))
     if want("fig10", "table2", "latency"):
         from benchmarks import bench_latency
-        bench_latency.run(n_steps=steps_s)
+        section("latency", lambda: bench_latency.run(n_steps=steps_s))
     if want("fig11", "scaling"):
         from benchmarks import bench_scaling
-        bench_scaling.run(n_steps=steps_s)
+        section("scaling", lambda: bench_scaling.run(n_steps=steps_s))
     if want("fig12", "rates"):
         from benchmarks import bench_rates
-        bench_rates.run(n_steps=steps_s)
+        section("rates", lambda: bench_rates.run(n_steps=steps_s))
     if want("fig13", "deadlines"):
         from benchmarks import bench_deadlines
-        bench_deadlines.run(n_steps=steps_s)
+        section("deadlines", lambda: bench_deadlines.run(n_steps=steps_s))
     if want("fig14", "fig15", "longrun"):
         from benchmarks import bench_longrun
-        bench_longrun.run(n_windows=6 if args.quick else 10)
+        section("longrun",
+                lambda: bench_longrun.run(n_windows=6 if args.quick else 10))
     if want("fig16", "fig17", "fig18", "ablation"):
         from benchmarks import bench_ablation
-        bench_ablation.run(n_steps=steps_s)
+        section("ablation", lambda: bench_ablation.run(n_steps=steps_s))
+    if want("engine", "bench_engine"):
+        from benchmarks import bench_engine
+        section("engine",
+                lambda: bench_engine.run(n_steps=1000 if args.quick else 2000))
     if want("predictors"):
         from benchmarks import bench_predictors
-        bench_predictors.run(steps=300 if args.quick else 600)
+        section("predictors",
+                lambda: bench_predictors.run(steps=300 if args.quick else 600))
     if want("roofline"):
         from benchmarks import roofline
-        roofline.run(write_md="experiments/roofline_table.md")
+        section("roofline",
+                lambda: roofline.run(write_md="experiments/roofline_table.md"))
     print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast tier-1 loop: CPU-only JAX, slow (multi-minute) suites excluded.
+# Full run:   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS=cpu
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q -m "not slow" "$@"

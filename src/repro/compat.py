@@ -1,0 +1,21 @@
+"""Version-compatibility shims for the installed jax.
+
+The codebase targets the jax >= 0.5 public API; this module maps the few
+calls whose spelling changed back onto older jax (0.4.x) equivalents so
+tier-1 runs on the container's pinned version.  Keep shims minimal and
+delete them as the pin advances (see ROADMAP open items).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` (>= 0.5 spelling) with fallback to
+    `jax.experimental.shard_map.shard_map` (`check_vma` was `check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.env import engine
+
 REQ_FEATS = 6
 EXP_FEATS = 7
 
@@ -25,41 +27,46 @@ def build_obs(cfg, pool, state: dict) -> dict:
     mo = float(cfg.max_output)
     mp = float(cfg.max_prompt)
     r = state["pending"]
+    run_valid = engine.run_valid(q)
+    wait_valid = engine.wait_valid(q)
+    run_p = engine.run_p(q)
+    run_d_cur = engine.run_d_cur(q)
+    wait_pred_d = engine.wait_pred_d(q)
 
     # --- running request nodes (N, R, 6) ---
-    d_cur = q["run_d_cur"].astype(jnp.float32)
-    run_mem = (q["run_p"] + q["run_d_cur"]).astype(jnp.float32) * \
+    d_cur = run_d_cur.astype(jnp.float32)
+    run_mem = (run_p + run_d_cur).astype(jnp.float32) * \
         pool.mem_per_token[:, None] / pool.mem_capacity[:, None]
-    l_cur = (t - q["run_t_arrive"]) / jnp.maximum(d_cur, 1.0)
+    l_cur = (t - engine.run_t_arrive(q)) / jnp.maximum(d_cur, 1.0)
     run_f = jnp.stack([
-        q["run_p"].astype(jnp.float32) / mp,
-        q["run_pred_s"],
-        q["run_pred_d"] / mo,
+        run_p.astype(jnp.float32) / mp,
+        engine.run_pred_s(q),
+        engine.run_pred_d(q) / mo,
         run_mem,
         d_cur / mo,
         l_cur / L,
     ], axis=-1)
-    run_f = jnp.where(q["run_valid"][..., None], run_f, 0.0)
+    run_f = jnp.where(run_valid[..., None], run_f, 0.0)
 
     # --- waiting request nodes (N, W, 6) ---
-    w_wait = (t - q["wait_t_arrive"]) / jnp.maximum(q["wait_pred_d"], 1.0)
+    w_wait = (t - engine.wait_t_arrive(q)) / jnp.maximum(wait_pred_d, 1.0)
     wait_f = jnp.stack([
-        q["wait_p"].astype(jnp.float32) / mp,
-        q["wait_pred_s"],
-        q["wait_pred_d"] / mo,
+        engine.wait_p(q).astype(jnp.float32) / mp,
+        engine.wait_pred_s(q),
+        wait_pred_d / mo,
         jnp.zeros_like(w_wait),            # not yet resident in memory
         jnp.zeros_like(w_wait),            # d_{j,t} = 0
         w_wait / L,                        # projected per-token wait
     ], axis=-1)
-    wait_f = jnp.where(q["wait_valid"][..., None], wait_f, 0.0)
+    wait_f = jnp.where(wait_valid[..., None], wait_f, 0.0)
 
     # --- expert nodes (N, 7) ---
-    tok = jnp.where(q["run_valid"], q["run_p"] + q["run_d_cur"], 0)
+    tok = jnp.where(run_valid, run_p + run_d_cur, 0)
     e_n = jnp.sum(tok, -1).astype(jnp.float32) * pool.mem_per_token / pool.mem_capacity
     exp_f = jnp.stack([
         e_n,
-        jnp.mean(q["run_valid"].astype(jnp.float32), -1),
-        jnp.mean(q["wait_valid"].astype(jnp.float32), -1),
+        jnp.mean(run_valid.astype(jnp.float32), -1),
+        jnp.mean(wait_valid.astype(jnp.float32), -1),
         r["pred_s"],
         r["pred_d"] / mo,
         pool.k1 * 1e3,
@@ -78,7 +85,7 @@ def build_obs(cfg, pool, state: dict) -> dict:
 
     return {
         "expert": exp_f, "run": run_f, "wait": wait_f,
-        "run_mask": q["run_valid"], "wait_mask": q["wait_valid"],
+        "run_mask": run_valid, "wait_mask": wait_valid,
         "arrived": arr_f,
     }
 

@@ -1,5 +1,11 @@
-"""Fixed-capacity replay buffer as a pure-JAX pytree (donated in the
-training loop; no host round-trips)."""
+"""Fixed-capacity replay buffer as a pure-JAX pytree.
+
+The whole buffer (obs/next_obs pytrees at full capacity — hundreds of MB
+at the default 100k capacity) lives on device and is DONATED to the jitted
+training iteration via ``donate_argnums`` in
+``repro.core.training.make_iteration``, so inserts update it in place with
+no per-iteration copy and no host round-trips.  The donation contract is
+asserted by ``tests/test_training_substrate.py::test_iteration_donates_replay_buffer``."""
 from __future__ import annotations
 
 from typing import Dict, Tuple

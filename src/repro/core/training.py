@@ -66,39 +66,45 @@ def make_reward_fn(env_cfg: env_lib.EnvConfig, pool, tc: TrainConfig):
     return reward
 
 
-def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
-                 tc: TrainConfig, *, pool=None,
-                 log_fn: Optional[Callable] = None) -> Tuple[dict, list]:
-    """Returns (trained params, history of metric dicts)."""
-    pool = pool if pool is not None else env_lib.make_env_pool(env_cfg)
-    key = jax.random.PRNGKey(tc.seed)
-    k_init, k_env, key = jax.random.split(key, 3)
-
+def init_train_state(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
+                     tc: TrainConfig, pool, key):
+    """Build (params, opt, opt_state, env_states, buf) for the jitted loop."""
+    k_init, k_env = jax.random.split(key)
     params = sac_lib.init_params(k_init, sac_cfg)
     opt = opt_lib.make_optimizer(
         "adamw", peak_lr=tc.lr, warmup_steps=100,
         total_steps=tc.iterations * tc.updates_per_iter,
         weight_decay=0.0, grad_clip=10.0)
     opt_state = opt.init(sac_lib.trainable(params))
-
     env_keys = jax.random.split(k_env, tc.n_envs)
     env_states = jax.vmap(lambda k: env_lib.reset(env_cfg, pool, k))(env_keys)
-
     obs0 = features.build_obs(env_cfg, pool, env_lib.reset(
         env_cfg, pool, jax.random.PRNGKey(0)))
     buf = replay.init(tc.buffer_capacity, obs0)
+    return params, opt, opt_state, env_states, buf
+
+
+def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
+                   tc: TrainConfig, pool, opt):
+    """One jitted collect+update iteration.
+
+    ``params / opt_state / env_states / buf`` are DONATED: the ~capacity-
+    sized replay buffer (hundreds of MB of obs/next_obs) is updated in
+    place instead of being copied every iteration.  Callers must rebind
+    their references to the returned values (``train_router`` does).
+    """
     reward_fn = make_reward_fn(env_cfg, pool, tc)
 
     def obs_of(env_states):
         o = jax.vmap(lambda s: features.build_obs(env_cfg, pool, s))(env_states)
         return _maybe_zero_preds(tc, o)
 
-    @jax.jit
     def iteration(params, opt_state, env_states, buf, key, step):
         def collect(carry, _):
-            env_states, buf, key = carry
+            # obs rides in the carry so build_obs runs ONCE per env step
+            # (the seed recomputed next_obs as obs on the following step).
+            env_states, obs, buf, key = carry
             key, k_act = jax.random.split(key)
-            obs = obs_of(env_states)
             actions = sac_lib.act(params, sac_cfg, obs, k_act)
 
             def one(s, a):
@@ -111,10 +117,11 @@ def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
             next_obs = obs_of(env_states2)
             buf = replay.add_batch(buf, obs, actions, rew,
                                    jnp.ones_like(rew), next_obs)
-            return (env_states2, buf, key), jnp.mean(rew)
+            return (env_states2, next_obs, buf, key), jnp.mean(rew)
 
-        (env_states, buf, key), rews = jax.lax.scan(
-            collect, (env_states, buf, key), None, length=tc.collect_steps)
+        (env_states, _, buf, key), rews = jax.lax.scan(
+            collect, (env_states, obs_of(env_states), buf, key), None,
+            length=tc.collect_steps)
 
         def update(carry, _):
             params, opt_state, key = carry
@@ -153,6 +160,20 @@ def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         aux["collect_reward"] = jnp.mean(rews)
         return params, opt_state, env_states, buf, key, aux
 
+    return jax.jit(iteration, donate_argnums=(0, 1, 2, 3))
+
+
+def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
+                 tc: TrainConfig, *, pool=None,
+                 log_fn: Optional[Callable] = None) -> Tuple[dict, list]:
+    """Returns (trained params, history of metric dicts)."""
+    pool = pool if pool is not None else env_lib.make_env_pool(env_cfg)
+    key = jax.random.PRNGKey(tc.seed)
+    k_state, key = jax.random.split(key)
+    params, opt, opt_state, env_states, buf = init_train_state(
+        env_cfg, sac_cfg, tc, pool, k_state)
+    iteration = make_iteration(env_cfg, sac_cfg, tc, pool, opt)
+
     history = []
     t0 = time.time()
     for it in range(tc.iterations):
@@ -173,7 +194,6 @@ def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
 def evaluate(env_cfg: env_lib.EnvConfig, pool, policy, n_steps: int = 5000,
              seed: int = 1234, n_envs: int = 4) -> dict:
     """Run a policy greedily; returns paper metrics (avg QoS, latency/token)."""
-    from repro.core import routers  # noqa: F401 (type only)
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, n_envs)
 

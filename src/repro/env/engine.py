@@ -12,9 +12,46 @@ arrays).  One engine iteration either
      requests leave, recording QoS phi = s * 1[l <= L], or
   3. idles to the next arrival time.
 
-``advance_expert`` runs iterations in a lax.while_loop until the expert's
-local clock reaches the next arrival; ``advance_all`` vmaps it over experts.
 Memory model: C_{j,n,t} = mem_per_token * (p_j + d_{j,t})  (Eq. 4).
+
+Packed SoA queue layout
+-----------------------
+Queue state is four tensors instead of 17 named arrays (the seed layout,
+preserved in ``repro.env.engine_ref`` as the semantic oracle):
+
+    run_i   (N, R, RUN_I_CH)  int32    [valid, p, d_true, d_cur]
+    run_f   (N, R, RUN_F_CH)  float32  [score, pred_s, pred_d, t_arrive, t_admit]
+    wait_i  (N, W, WAIT_I_CH) int32    [valid, p, d_true]
+    wait_f  (N, W, WAIT_F_CH) float32  [score, pred_s, pred_d, t_arrive]
+
+``valid`` is stored as 0/1 int32; the ``run_valid``/``wait_valid`` accessors
+below return bools.  Invalid slots may hold stale field values — every
+consumer must mask through the valid channel, never read raw slots.
+
+Lockstep advance
+----------------
+``advance_all`` runs a SINGLE ``lax.while_loop`` over all N experts in
+lockstep (instead of the seed's vmap-of-while_loop whose body built two
+full candidate queue dicts and merged them with 3-way ``jnp.where`` over
+the whole tree).  Invariants:
+
+  * per iteration each expert takes exactly one masked action —
+    admit / decode / idle — or is untouched when inactive
+    (``clock >= t_next`` or no work);
+  * actions only touch an expert's own rows, so the per-expert action
+    sequence is identical to running the seed's per-expert loop, and the
+    loop trip count is the max over experts (same as vmap-of-while);
+  * updates are masked in-place channel writes; no candidate queue
+    dicts are materialized;
+  * the wait side is loop-invariant except its valid bit (admission pops
+    the head; new entries only arrive between advances via the env), so
+    the while-loop carries just the (N, W) wait-valid mask and closes
+    over the wait tensors;
+  * after the loop every clock is clamped to ``t_next`` (idle experts
+    jump forward).
+
+The equivalence is asserted bit-for-bit against ``engine_ref`` in
+``tests/test_engine_equiv.py``.
 """
 from __future__ import annotations
 
@@ -27,124 +64,235 @@ from repro.env.profiles import ExpertPool
 
 INF = jnp.float32(1e30)
 
+# Channel indices for the packed layout (see module docstring).
+RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR = 0, 1, 2, 3
+RUN_I_CH = 4
+RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT = 0, 1, 2, 3, 4
+RUN_F_CH = 5
+WI_VALID, WI_P, WI_D_TRUE = 0, 1, 2
+WAIT_I_CH = 3
+WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE = 0, 1, 2, 3
+WAIT_F_CH = 4
+
 
 def empty_queues(n: int, r: int, w: int) -> dict:
-    fz = lambda *s: jnp.zeros(s, jnp.float32)
-    iz = lambda *s: jnp.zeros(s, jnp.int32)
-    bz = lambda *s: jnp.zeros(s, jnp.bool_)
     return {
-        "run_valid": bz(n, r), "run_p": iz(n, r), "run_d_true": iz(n, r),
-        "run_d_cur": iz(n, r), "run_score": fz(n, r),
-        "run_pred_s": fz(n, r), "run_pred_d": fz(n, r),
-        "run_t_arrive": fz(n, r), "run_t_admit": fz(n, r),
-        "wait_valid": bz(n, w), "wait_p": iz(n, w), "wait_d_true": iz(n, w),
-        "wait_score": fz(n, w), "wait_pred_s": fz(n, w),
-        "wait_pred_d": fz(n, w), "wait_t_arrive": fz(n, w),
+        "run_i": jnp.zeros((n, r, RUN_I_CH), jnp.int32),
+        "run_f": jnp.zeros((n, r, RUN_F_CH), jnp.float32),
+        "wait_i": jnp.zeros((n, w, WAIT_I_CH), jnp.int32),
+        "wait_f": jnp.zeros((n, w, WAIT_F_CH), jnp.float32),
     }
+
+
+# ---------------------------------------------------------------------------
+# Thin accessors — keep features.build_obs, routers and tests readable.
+# ---------------------------------------------------------------------------
+
+
+def run_valid(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_VALID].astype(jnp.bool_)
+
+
+def run_p(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_P]
+
+
+def run_d_true(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_D_TRUE]
+
+
+def run_d_cur(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_D_CUR]
+
+
+def run_score(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_SCORE]
+
+
+def run_pred_s(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_PRED_S]
+
+
+def run_pred_d(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_PRED_D]
+
+
+def run_t_arrive(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_T_ARRIVE]
+
+
+def run_t_admit(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_T_ADMIT]
+
+
+def wait_valid(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_VALID].astype(jnp.bool_)
+
+
+def wait_p(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_P]
+
+
+def wait_d_true(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_D_TRUE]
+
+
+def wait_score(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_SCORE]
+
+
+def wait_pred_s(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_PRED_S]
+
+
+def wait_pred_d(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_PRED_D]
+
+
+def wait_t_arrive(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_T_ARRIVE]
+
+
+def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
+              score: jax.Array, pred_s: jax.Array, pred_d: jax.Array,
+              t: jax.Array, gate=True) -> Tuple[dict, jax.Array]:
+    """Masked push of one request into expert ``n``'s first free waiting
+    slot (no-op when the queue is full or ``gate`` is False).  The single
+    place that knows the wait-side channel order; returns (queues, pushed)."""
+    free = ~wait_valid(q)[n]
+    pushed = jnp.any(free) & gate
+    slot = jnp.argmax(free)
+    new_i = jnp.stack([pushed.astype(jnp.int32),
+                       jnp.asarray(p, jnp.int32),
+                       jnp.asarray(d_true, jnp.int32)])
+    new_f = jnp.stack([jnp.asarray(score, jnp.float32),
+                       jnp.asarray(pred_s, jnp.float32),
+                       jnp.asarray(pred_d, jnp.float32),
+                       jnp.asarray(t, jnp.float32)])
+    q = {
+        **q,
+        "wait_i": q["wait_i"].at[n, slot].set(
+            jnp.where(pushed, new_i, q["wait_i"][n, slot])),
+        "wait_f": q["wait_f"].at[n, slot].set(
+            jnp.where(pushed, new_f, q["wait_f"][n, slot])),
+    }
+    return q, pushed
 
 
 def mem_used(q: dict, mem_per_token: jax.Array) -> jax.Array:
     """(N,) bytes currently resident per expert."""
-    tok = jnp.where(q["run_valid"], q["run_p"] + q["run_d_cur"], 0)
+    tok = jnp.where(run_valid(q), run_p(q) + run_d_cur(q), 0)
     return jnp.sum(tok, axis=-1).astype(jnp.float32) * mem_per_token
-
-
-def _advance_one(pool_scalars: dict, latency_L: float, q: dict,
-                 clock: jax.Array, t_next: jax.Array) -> Tuple[dict, jax.Array, dict]:
-    """Advance ONE expert (all arrays are this expert's slices, shape (R,)/(W,)).
-
-    Returns (queues, clock, acc) where acc sums completion stats in the
-    window: (phi_sum, lat_sum, n_completed, n_violate).
-    """
-    k1, k2 = pool_scalars["k1"], pool_scalars["k2"]
-    cap, mpt = pool_scalars["mem_capacity"], pool_scalars["mem_per_token"]
-
-    acc0 = {"phi": jnp.float32(0), "lat": jnp.float32(0),
-            "score": jnp.float32(0), "wait": jnp.float32(0),
-            "done": jnp.float32(0), "viol": jnp.float32(0)}
-
-    def cond(c):
-        q, clock, _ = c
-        has_work = jnp.any(q["run_valid"]) | jnp.any(q["wait_valid"])
-        return (clock < t_next) & has_work
-
-    def body(c):
-        q, clock, acc = c
-        mem = jnp.sum(jnp.where(q["run_valid"],
-                                q["run_p"] + q["run_d_cur"], 0)) * mpt
-        w_has = jnp.any(q["wait_valid"])
-        w_key = jnp.where(q["wait_valid"], q["wait_t_arrive"], INF)
-        w_idx = jnp.argmin(w_key)
-        r_free = jnp.argmin(q["run_valid"])  # first empty slot
-        r_has_space = ~jnp.all(q["run_valid"])
-        head_p = q["wait_p"][w_idx]
-        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
-        can_admit = w_has & r_has_space & fits
-
-        # --- candidate A: prefill head ---
-        qa = dict(q)
-        qa["run_valid"] = q["run_valid"].at[r_free].set(True)
-        qa["run_p"] = q["run_p"].at[r_free].set(head_p)
-        qa["run_d_true"] = q["run_d_true"].at[r_free].set(q["wait_d_true"][w_idx])
-        qa["run_d_cur"] = q["run_d_cur"].at[r_free].set(1)  # prefill emits y1
-        qa["run_score"] = q["run_score"].at[r_free].set(q["wait_score"][w_idx])
-        qa["run_pred_s"] = q["run_pred_s"].at[r_free].set(q["wait_pred_s"][w_idx])
-        qa["run_pred_d"] = q["run_pred_d"].at[r_free].set(q["wait_pred_d"][w_idx])
-        qa["run_t_arrive"] = q["run_t_arrive"].at[r_free].set(q["wait_t_arrive"][w_idx])
-        qa["run_t_admit"] = q["run_t_admit"].at[r_free].set(clock)
-        qa["wait_valid"] = q["wait_valid"].at[w_idx].set(False)
-        clock_a = clock + k1 * head_p.astype(jnp.float32)
-
-        # --- candidate B: decode iteration ---
-        run_tokens = jnp.sum(jnp.where(q["run_valid"],
-                                       q["run_p"] + q["run_d_cur"], 0))
-        clock_b = clock + k2 * run_tokens.astype(jnp.float32)
-        d_new = q["run_d_cur"] + q["run_valid"].astype(jnp.int32)
-        finished = q["run_valid"] & (d_new >= q["run_d_true"])
-        lat = (clock_b - q["run_t_arrive"]) / jnp.maximum(
-            q["run_d_true"].astype(jnp.float32), 1.0)
-        ok = lat <= latency_L
-        phi = jnp.where(finished, q["run_score"] * ok.astype(jnp.float32), 0.0)
-        qb = dict(q)
-        qb["run_d_cur"] = d_new
-        qb["run_valid"] = q["run_valid"] & ~finished
-        acc_b = {
-            "phi": acc["phi"] + jnp.sum(phi),
-            "lat": acc["lat"] + jnp.sum(jnp.where(finished, lat, 0.0)),
-            "score": acc["score"] + jnp.sum(jnp.where(finished, q["run_score"], 0.0)),
-            "done": acc["done"] + jnp.sum(finished.astype(jnp.float32)),
-            "viol": acc["viol"] + jnp.sum(
-                (finished & ~ok).astype(jnp.float32)),
-            "wait": acc["wait"] + jnp.sum(jnp.where(
-                finished, q["run_t_admit"] - q["run_t_arrive"], 0.0)),
-        }
-
-        r_has = jnp.any(q["run_valid"])
-        # select: admit > decode > idle
-        use_a = can_admit
-        use_b = (~can_admit) & r_has
-        q_out = jax.tree.map(
-            lambda a, b, base: jnp.where(use_a, a, jnp.where(use_b, b, base)),
-            qa, qb, q)
-        clock_out = jnp.where(use_a, clock_a,
-                              jnp.where(use_b, clock_b, t_next))
-        acc_out = jax.tree.map(
-            lambda nb, base: jnp.where(use_b, nb, base), acc_b, acc)
-        return (q_out, clock_out, acc_out)
-
-    q, clock, acc = jax.lax.while_loop(cond, body, (q, clock, acc0))
-    clock = jnp.maximum(clock, t_next)  # idle experts jump forward
-    return q, clock, acc
 
 
 def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
                 clocks: jax.Array, t_next: jax.Array) -> Tuple[dict, jax.Array, dict]:
-    """vmap the single-expert advance over all N experts."""
-    scalars = {"k1": pool.k1, "k2": pool.k2,
-               "mem_capacity": pool.mem_capacity,
-               "mem_per_token": pool.mem_per_token}
+    """Advance all N experts in lockstep until every clock reaches ``t_next``.
 
-    def one(sc, q, clock):
-        return _advance_one(sc, latency_L, q, clock, t_next)
+    Returns (queues, clocks, acc) with acc entries shaped (N,) summing
+    completion stats in the window: phi / lat / score / wait / done / viol.
+    """
+    k1, k2 = pool.k1, pool.k2                              # (N,)
+    cap, mpt = pool.mem_capacity, pool.mem_per_token       # (N,)
+    n = k1.shape[0]
+    r_cap = queues["run_i"].shape[1]
+    w_cap = queues["wait_i"].shape[1]
+    run_slots = jnp.arange(r_cap)[None, :]                 # (1, R)
+    wait_slots = jnp.arange(w_cap)[None, :]                # (1, W)
 
-    return jax.vmap(one)(scalars, queues, clocks)
+    acc0 = {key: jnp.zeros((n,), jnp.float32)
+            for key in ("phi", "lat", "score", "wait", "done", "viol")}
+
+    # Everything except the wait VALID bit is loop-invariant on the wait
+    # side (admission only clears valid; fields are written by the env
+    # between advances), so the loop closes over wait_i/wait_f and carries
+    # only the (N, W) valid mask.
+    wait_i0, wait_f0 = queues["wait_i"], queues["wait_f"]
+    wait_t_arr0 = wait_f0[..., WF_T_ARRIVE]
+
+    def active_mask(run_i, wvalidb, clocks):
+        has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
+        return (clocks < t_next) & has_work
+
+    def cond(c):
+        return jnp.any(c[5])  # carried active mask
+
+    def body(c):
+        run_i, run_f, wvalidb, clocks, acc, active = c
+        validb = run_i[..., RI_VALID] > 0                  # (N, R)
+        p = run_i[..., RI_P]
+        d_true = run_i[..., RI_D_TRUE]
+        d_cur = run_i[..., RI_D_CUR]
+
+        run_tokens = jnp.sum(jnp.where(validb, p + d_cur, 0), -1)   # (N,)
+        mem = run_tokens * mpt
+
+        # choose action per expert: admit > decode > idle
+        w_key = jnp.where(wvalidb, wait_t_arr0, INF)
+        w_idx = jnp.argmin(w_key, -1)                      # (N,) oldest waiter
+        w_has = jnp.any(wvalidb, -1)
+        r_free = jnp.argmin(validb, -1)                    # (N,) first empty slot
+        r_has_space = ~jnp.all(validb, -1)
+        head_i = jnp.take_along_axis(wait_i0, w_idx[:, None, None], 1)[:, 0]
+        head_f = jnp.take_along_axis(wait_f0, w_idx[:, None, None], 1)[:, 0]
+        head_p = head_i[:, WI_P]
+        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
+        can_admit = w_has & r_has_space & fits
+        r_has = jnp.any(validb, -1)
+
+        adm = active & can_admit
+        dec = active & ~can_admit & r_has
+        idle = active & ~can_admit & ~r_has
+
+        # --- decode: masked in-place over this iteration's decoding rows ---
+        dec_rows = dec[:, None] & validb                   # (N, R)
+        d_new = d_cur + dec_rows.astype(jnp.int32)
+        finished = dec_rows & (d_new >= d_true)
+        clock_dec = clocks + k2 * run_tokens.astype(jnp.float32)
+        lat = (clock_dec[:, None] - run_f[..., RF_T_ARRIVE]) / jnp.maximum(
+            d_true.astype(jnp.float32), 1.0)
+        ok = (lat <= latency_L).astype(jnp.float32)
+        fin = finished.astype(jnp.float32)
+        score = run_f[..., RF_SCORE]
+        acc = {
+            "phi": acc["phi"] + jnp.sum(fin * (score * ok), -1),
+            "lat": acc["lat"] + jnp.sum(fin * lat, -1),
+            "score": acc["score"] + jnp.sum(fin * score, -1),
+            "done": acc["done"] + jnp.sum(fin, -1),
+            "viol": acc["viol"] + jnp.sum(fin * (1.0 - ok), -1),
+            "wait": acc["wait"] + jnp.sum(
+                fin * (run_f[..., RF_T_ADMIT] - run_f[..., RF_T_ARRIVE]), -1),
+        }
+        valid_after = validb & ~finished
+
+        # --- admit: masked scatter of the queue head into slot r_free ---
+        slot_oh = adm[:, None] & (run_slots == r_free[:, None])     # (N, R)
+        run_i = jnp.stack([
+            (valid_after | slot_oh).astype(jnp.int32),
+            jnp.where(slot_oh, head_p[:, None], p),
+            jnp.where(slot_oh, head_i[:, WI_D_TRUE][:, None], d_true),
+            jnp.where(slot_oh, 1, d_new),                  # prefill emits y1
+        ], axis=-1)
+        adm_f = jnp.stack([head_f[:, WF_SCORE], head_f[:, WF_PRED_S],
+                           head_f[:, WF_PRED_D], head_f[:, WF_T_ARRIVE],
+                           clocks], axis=-1)               # (N, RUN_F_CH)
+        run_f = jnp.where(slot_oh[..., None], adm_f[:, None, :], run_f)
+        head_oh = adm[:, None] & (wait_slots == w_idx[:, None])     # (N, W)
+        wvalidb = wvalidb & ~head_oh
+
+        clock_adm = clocks + k1 * head_p.astype(jnp.float32)
+        clocks = jnp.where(adm, clock_adm,
+                           jnp.where(dec, clock_dec,
+                                     jnp.where(idle, t_next, clocks)))
+        return (run_i, run_f, wvalidb, clocks, acc,
+                active_mask(run_i, wvalidb, clocks))
+
+    wvalid0 = queues["wait_i"][..., WI_VALID] > 0
+    run_i, run_f, wvalidb, clocks, acc, _ = jax.lax.while_loop(
+        cond, body, (queues["run_i"], queues["run_f"], wvalid0, clocks, acc0,
+                     active_mask(queues["run_i"], wvalid0, clocks)))
+    clocks = jnp.maximum(clocks, t_next)  # idle experts jump forward
+    queues = {"run_i": run_i, "run_f": run_f,
+              "wait_i": wait_i0.at[..., WI_VALID].set(wvalidb.astype(jnp.int32)),
+              "wait_f": wait_f0}
+    return queues, clocks, acc

@@ -138,53 +138,44 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
     p_j = state["pending"]["p_len"].astype(jnp.float32)
     d_j = state["pending"]["pred_d"][n]
 
-    valid = q["run_valid"][n]
-    d_cur = q["run_d_cur"][n].astype(jnp.float32)
-    d_hat = jnp.maximum(q["run_pred_d"][n], d_cur + 1.0)
+    ri, rf = q["run_i"][n], q["run_f"][n]                  # (R, CH)
+    valid = ri[:, engine.RI_VALID] > 0
+    d_cur = ri[:, engine.RI_D_CUR].astype(jnp.float32)
+    t_arrive = rf[:, engine.RF_T_ARRIVE]
+    d_hat = jnp.maximum(rf[:, engine.RF_PRED_D], d_cur + 1.0)
     rem = jnp.maximum(d_hat - d_cur, 0.0)
     K = jnp.minimum(rem, d_j)
     # Eq. 15 numerator: k1*p_j + k2 * sum_{k=1..K}(p_j + k)
     extra = k1 * p_j + k2 * (K * p_j + 0.5 * K * (K + 1.0))
     if cfg.impact_mode == "paper":
         l_plus = extra / jnp.maximum(d_hat, 1.0)
-        l_cur = (t - q["run_t_arrive"][n]) / jnp.maximum(d_cur, 1.0)
+        l_cur = (t - t_arrive) / jnp.maximum(d_cur, 1.0)
         l_est = l_cur + l_plus
     else:  # "projected": estimate the FINAL avg latency per token instead
-        elapsed = t - q["run_t_arrive"][n]
+        elapsed = t - t_arrive
         queue_tokens = jnp.sum(jnp.where(
-            valid, (q["run_p"][n] + q["run_d_cur"][n]).astype(jnp.float32),
+            valid,
+            (ri[:, engine.RI_P] + ri[:, engine.RI_D_CUR]).astype(jnp.float32),
             0.0))
         est_remaining = rem * k2 * queue_tokens
         l_est = (elapsed + est_remaining + extra) / jnp.maximum(d_hat, 1.0)
     would_violate = valid & (l_est >= cfg.latency_L)
-    penalty = jnp.sum(jnp.where(would_violate, q["run_pred_s"][n], 0.0))
+    penalty = jnp.sum(jnp.where(would_violate, rf[:, engine.RF_PRED_S], 0.0))
     return jnp.where(action > 0, penalty, 0.0)
 
 
 def _admit(cfg: EnvConfig, state: dict, action: jax.Array) -> Tuple[dict, jax.Array]:
     """Push pending request into expert (action-1)'s waiting queue."""
-    q = dict(state["queues"])
     r = state["pending"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
-    slot_free = ~q["wait_valid"][n]
-    has_slot = jnp.any(slot_free)
-    slot = jnp.argmax(slot_free)
-    do = (action > 0) & has_slot
-    dropped = (action == 0) | ((action > 0) & ~has_slot)
-
-    def set_at(arr, val):
-        return arr.at[n, slot].set(jnp.where(do, val, arr[n, slot]))
-
-    q["wait_valid"] = q["wait_valid"].at[n, slot].set(
-        jnp.where(do, True, q["wait_valid"][n, slot]))
-    q["wait_p"] = set_at(q["wait_p"], r["p_len"])
-    q["wait_d_true"] = set_at(q["wait_d_true"], r["out_len"][n])
-    q["wait_score"] = set_at(q["wait_score"], r["score"][n])
-    q["wait_pred_s"] = set_at(q["wait_pred_s"], r["pred_s"][n])
-    q["wait_pred_d"] = set_at(q["wait_pred_d"], r["pred_d"][n])
-    q["wait_t_arrive"] = set_at(q["wait_t_arrive"], state["clock"])
+    # packed layout: one int + one float scatter instead of 7 field writes
+    queues, pushed = engine.push_wait(
+        state["queues"], n, p=r["p_len"], d_true=r["out_len"][n],
+        score=r["score"][n], pred_s=r["pred_s"][n], pred_d=r["pred_d"][n],
+        t=state["clock"], gate=action > 0)
+    dropped = (action == 0) | ((action > 0) & ~pushed)
     state = dict(state)
-    state["queues"] = q
+    state["queues"] = queues
     return state, dropped.astype(jnp.float32)
 
 

@@ -44,7 +44,8 @@ def test_request_conservation(setup):
     state, _ = _rollout(cfg, pool, 800)
     s = state["stats"]
     q = state["queues"]
-    in_system = int(jnp.sum(q["run_valid"])) + int(jnp.sum(q["wait_valid"]))
+    in_system = (int(jnp.sum(engine.run_valid(q)))
+                 + int(jnp.sum(engine.wait_valid(q))))
     assert int(s["done"]) + in_system + int(s["dropped"]) == 800
 
 
@@ -88,9 +89,9 @@ def test_impact_penalty_increases_with_load(setup):
     for _ in range(10):
         state, _, _ = env_lib.step(cfg, pool, state, jnp.asarray(1))
     q = state["queues"]
-    loaded = int(jnp.argmax(jnp.sum(q["run_valid"], -1)))
-    empty = int(jnp.argmin(jnp.sum(q["run_valid"], -1)
-                           + jnp.sum(q["wait_valid"], -1)))
+    loaded = int(jnp.argmax(jnp.sum(engine.run_valid(q), -1)))
+    empty = int(jnp.argmin(jnp.sum(engine.run_valid(q), -1)
+                           + jnp.sum(engine.wait_valid(q), -1)))
     pen_loaded = float(env_lib.impact_penalty(
         cfg, pool, state, jnp.asarray(loaded + 1)))
     pen_empty = float(env_lib.impact_penalty(

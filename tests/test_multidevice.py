@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute; scripts/ci.sh skips these
+
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
 
@@ -28,8 +30,8 @@ def test_moe_sharded_matches_local():
         from repro.configs import get_config, reduce_config
         from repro.models import moe
         from repro.distributed.api import MeshPolicy, use_mesh_policy
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = reduce_config(get_config("dbrx-132b"), capacity_factor=8.0)
         key = jax.random.PRNGKey(0)
         params = moe.init_moe(key, cfg, jnp.float32)
@@ -57,8 +59,8 @@ def test_train_step_on_mesh_runs():
         from repro.train import optimizer as opt_lib
         from repro.models import model
         from repro.distributed import sharding
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         cfg = reduce_config(get_config("qwen1.5-0.5b"),
                             d_model=64, n_heads=4, n_kv_heads=2, d_head=16)
         opt = opt_lib.make_optimizer("adamw", total_steps=4)
@@ -84,8 +86,8 @@ def test_collectives_multidevice():
     run_py("""
         import jax, jax.numpy as jnp
         from repro.distributed import collectives
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         want = jnp.sum(x, axis=0)
         got = collectives.ring_allreduce(x, mesh, "data")

@@ -1,5 +1,8 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -84,9 +87,9 @@ def test_data_pipeline_deterministic(seed, step):
 def test_empty_queue_invariants(n, r, w):
     from repro.env import engine
     q = engine.empty_queues(n, r, w)
-    assert q["run_valid"].shape == (n, r)
-    assert not bool(jnp.any(q["run_valid"]))
-    assert not bool(jnp.any(q["wait_valid"]))
+    assert engine.run_valid(q).shape == (n, r)
+    assert not bool(jnp.any(engine.run_valid(q)))
+    assert not bool(jnp.any(engine.wait_valid(q)))
 
 
 @given(

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute; scripts/ci.sh skips these
+
 from repro.core import features, predictors, routers, sac as sac_lib, training
 from repro.env import env as env_lib
 from repro.env.env import EnvConfig

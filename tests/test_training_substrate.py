@@ -123,3 +123,47 @@ def test_elastic_reshard_on_host_mesh():
     assert int(out["step"]) == 3
     np.testing.assert_array_equal(np.asarray(out["params"]["embed"]),
                                   np.ones((8, 4)))
+
+
+def _tiny_training_setup():
+    from repro.core import sac as sac_lib, training
+    from repro.env import env as env_lib
+    env_cfg = env_lib.EnvConfig(n_experts=3, run_cap=2, wait_cap=2)
+    pool = env_lib.make_env_pool(env_cfg)
+    sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1, hidden=16,
+                                flat_dim=env_cfg.n_experts * 3)
+    tc = training.TrainConfig(n_envs=2, collect_steps=2, updates_per_iter=1,
+                              batch_size=8, buffer_capacity=64,
+                              warmup_transitions=4, iterations=2)
+    params, opt, opt_state, env_states, buf = training.init_train_state(
+        env_cfg, sac_cfg, tc, pool, jax.random.PRNGKey(0))
+    it_fn = training.make_iteration(env_cfg, sac_cfg, tc, pool, opt)
+    return it_fn, params, opt_state, env_states, buf
+
+
+def test_iteration_donates_replay_buffer():
+    """`iteration` must donate params/opt_state/env_states/buf: the lowered
+    module aliases the buffer inputs to outputs, and calling it deletes the
+    caller's (donated) replay arrays instead of copying them."""
+    it_fn, params, opt_state, env_states, buf = _tiny_training_setup()
+    key = jax.random.PRNGKey(1)
+    step = jnp.zeros((), jnp.int32)
+
+    lowered = it_fn.lower(params, opt_state, env_states, buf, key, step)
+    txt = lowered.as_text()
+    n_buf_leaves = len([x for x in jax.tree.leaves(buf)
+                        if isinstance(x, jax.Array)])
+    assert n_buf_leaves > 0
+    # every donated array (incl. all replay leaves) gets an aliasing attr
+    assert txt.count("tf.aliasing_output") >= n_buf_leaves
+
+    out = it_fn(params, opt_state, env_states, buf, key, step)
+    assert all(x.is_deleted() for x in jax.tree.leaves(buf)
+               if isinstance(x, jax.Array))
+    # the returned buffer is usable for the next (donating) call
+    params2, opt_state2, env_states2, buf2, key2, aux = out
+    out2 = it_fn(params2, opt_state2, env_states2, buf2, key2, step + 1)
+    assert all(x.is_deleted() for x in jax.tree.leaves(buf2)
+               if isinstance(x, jax.Array))
+    size = int(out2[3]["size"])
+    assert size == 8  # 2 iterations x n_envs(2) x collect_steps(2) x 2 calls
