@@ -1,5 +1,10 @@
-"""Microbenchmark: `advance_all` alone — lockstep packed engine vs the seed
-reference (`repro.env.engine_ref`), N ∈ {6, 16, 64}, Poisson λ=5.
+"""Microbenchmark: `advance_all` alone — two sections:
+
+  1. lockstep packed engine (backend="xla") vs the seed reference
+     (`repro.env.engine_ref`), N ∈ {6, 16, 64}, and
+  2. backend sweep at fleet scale, N ∈ {64, 256, 512, 1024}: "xla" vs
+     "pallas" (fused lockstep_advance kernel; interpret mode off-TPU) vs
+     "shard_map" (expert axis over the local device mesh).
 
 Each benchmark step injects one request into a round-robin expert's waiting
 queue (so the engine never drains) and advances all experts to the next
@@ -10,6 +15,7 @@ Poisson arrival; steps/sec is the whole scan's throughput.
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -17,6 +23,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.env import engine, engine_ref, profiles
+
+BIG_N = (64, 256, 512, 1024)
 
 R, W = 5, 5
 LAT_L = 0.030
@@ -73,14 +81,45 @@ def _make_runner(pool, n_experts, n_steps, empty_queues, inject, advance):
     return run
 
 
-def _time(run, repeats: int = 3) -> float:
-    jax.block_until_ready(run())  # compile + warm up
+def _time(run, repeats: int = 3):
+    """Returns (best seconds, the warm-up call's result) — callers read
+    derived counters from the result instead of re-running the scan."""
+    out = run()
+    jax.block_until_ready(out)  # compile + warm up
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(run())
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, out
+
+
+def backend_sweep(n_list=BIG_N, n_steps: int = 200,
+                  prefix: str = "engine/advance_all",
+                  backends=engine.BACKENDS) -> None:
+    """Advance-throughput rows for every engine backend at fleet scale.
+    Reused by bench_scaling (large-N sweep) — the acceptance gate is that
+    at N=512 the sharded/kernel rows are no slower than backend="xla".
+    n_steps is part of the measurement (it sets how many experts ever see
+    work), so `run.py --check` runs must keep the default to stay
+    comparable with the committed BENCH_engine.json baseline."""
+    for n_experts in n_list:
+        pool = profiles.make_pool(n_experts)
+        secs = {}
+        for backend in backends:
+            adv = functools.partial(engine.advance_all, backend=backend)
+            runner = _make_runner(pool, n_experts, n_steps,
+                                  engine.empty_queues, _inject_packed, adv)
+            secs[backend], (_, done) = _time(runner)
+            common.emit(
+                f"{prefix}/N{n_experts}/{backend}",
+                secs[backend] / n_steps * 1e6,
+                f"steps_per_s={n_steps / secs[backend]:.1f};"
+                f"done={float(done):.0f}")
+        if "xla" in secs:
+            for backend in (b for b in backends if b != "xla"):
+                common.emit(f"{prefix}/N{n_experts}/{backend}_vs_xla", 0.0,
+                            f"x={secs['xla'] / secs[backend]:.2f}")
 
 
 def run(n_steps: int = 2000, json_out: bool = False) -> None:
@@ -92,10 +131,8 @@ def run(n_steps: int = 2000, json_out: bool = False) -> None:
         ref_run = _make_runner(pool, n_experts, n_steps,
                                engine_ref.empty_queues, _inject_named,
                                engine_ref.advance_all)
-        new_s = _time(new_run)
-        ref_s = _time(ref_run)
-        _, done_new = new_run()
-        _, done_ref = ref_run()
+        new_s, (_, done_new) = _time(new_run)
+        ref_s, (_, done_ref) = _time(ref_run)
         for label, secs, done in (("lockstep", new_s, done_new),
                                   ("seed_ref", ref_s, done_ref)):
             common.emit(
@@ -104,6 +141,7 @@ def run(n_steps: int = 2000, json_out: bool = False) -> None:
                 f"steps_per_s={n_steps / secs:.1f};done={float(done):.0f}")
         common.emit(f"engine/advance_all/N{n_experts}/speedup", 0.0,
                     f"x={ref_s / new_s:.2f}")
+    backend_sweep()  # fixed 200 steps: rows must match the --check baseline
     if json_out:
         common.write_json("engine")
 

@@ -1,4 +1,7 @@
-"""Fig. 11 — QoS / latency across the number of edge experts N (3..12).
+"""Fig. 11 — QoS / latency across the number of edge experts N (3..12),
+plus the beyond-paper fleet-scale engine sweep: `advance_all` backends
+(xla / pallas / shard_map) at N ∈ {64, 256, 512, 1024}, the edge-cluster
+scales of EdgeShard / Yu et al. (2025).
 
 RL policies are trained at N=6 (paper trains per setting; our default
 harness reuses the N=6 policy only where shapes match, so RL rows appear
@@ -22,6 +25,12 @@ def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
             m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
             us = m["wall_s"] / n_steps * 1e6
             common.emit(f"fig11_N{n}/{pol.name}", us, common.fmt_metrics(m))
+    # shorter than bench_engine's 200-step sweep: these rows are the
+    # scaling *shape*, not the --check baseline (which only gates the
+    # engine suite), and a full `benchmarks.run` already pays for that one
+    from benchmarks import bench_engine
+    bench_engine.backend_sweep(n_steps=100,
+                               prefix="engine_scaling/advance_all")
 
 
 if __name__ == "__main__":

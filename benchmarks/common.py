@@ -49,20 +49,54 @@ def drain_results() -> List[dict]:
     return rows
 
 
-def write_json(suite: str, out_dir: str = ".") -> str:
-    """Write rows emitted since the last drain to BENCH_<suite>.json."""
+def write_json(suite: str, out_dir: str = ".", rows=None) -> str:
+    """Write rows (default: those emitted since the last drain) to
+    BENCH_<suite>.json."""
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
     payload = {
         "suite": suite,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
-        "results": drain_results(),
+        "results": drain_results() if rows is None else rows,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     print(f"# wrote {path}", file=sys.stderr)
     return path
+
+
+def check_against_baseline(suite: str, rows, *, tol: float = 1.3,
+                           baseline_dir: str = ".") -> List[str]:
+    """Perf-regression check: compare fresh ``us_per_call`` rows against the
+    committed ``BENCH_<suite>.json`` baseline; a row regresses when it is
+    more than ``tol`` x slower.  Derived-only rows (us_per_call == 0) and
+    rows absent from the baseline (new benchmarks) are skipped.  Returns
+    human-readable failure strings (empty = pass)."""
+    path = os.path.join(baseline_dir, f"BENCH_{suite}.json")
+    if not os.path.exists(path):
+        print(f"# [check] no baseline {path}; skipping", file=sys.stderr)
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("backend") != jax.default_backend():
+        print(f"# [check] {path} was recorded on backend="
+              f"{payload.get('backend')!r} but this run uses "
+              f"{jax.default_backend()!r}; cross-platform timings are not "
+              f"comparable — skipping", file=sys.stderr)
+        return []
+    base = {r["name"]: r["us_per_call"] for r in payload["results"]}
+    failures = []
+    for row in rows:
+        ref = base.get(row["name"], 0.0)
+        if ref <= 0.0 or row["us_per_call"] <= 0.0:
+            continue
+        ratio = row["us_per_call"] / ref
+        if ratio > tol:
+            failures.append(
+                f"{suite}/{row['name']}: {row['us_per_call']:.1f}us vs "
+                f"baseline {ref:.1f}us ({ratio:.2f}x > {tol:g}x)")
+    return failures
 
 
 def load_router(variant: str, env_cfg, *, quick_iters: int = 80,

@@ -1,10 +1,14 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,roofline] [--json]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,roofline]
+                                            [--json] [--check [--tol 1.3]]
 
 Emits ``name,us_per_call,derived`` CSV on stdout; with ``--json`` each
 section additionally writes machine-readable ``BENCH_<suite>.json`` (name,
-us_per_call, parsed derived metrics) for perf-trajectory tracking.  Sections:
+us_per_call, parsed derived metrics) for perf-trajectory tracking, and with
+``--check`` fresh ``us_per_call`` values are diffed against the committed
+baselines (exit 1 beyond ``--tol``; wired into scripts/ci.sh for the engine
+suite).  Sections:
   fig7/fig9    routing comparison (Poisson / real-world)      bench_routing
   fig10/table2 e2e latency decomposition + component profile  bench_latency
   fig11        number-of-experts sweep                        bench_scaling
@@ -31,6 +35,11 @@ def main() -> None:
                    help="comma-separated section filter")
     p.add_argument("--json", action="store_true",
                    help="write BENCH_<suite>.json per section")
+    p.add_argument("--check", action="store_true",
+                   help="diff fresh us_per_call against the committed "
+                        "BENCH_<suite>.json baselines; exit 1 on regression")
+    p.add_argument("--tol", type=float, default=1.3,
+                   help="--check regression tolerance (x baseline)")
     args = p.parse_args()
     only = set(args.only.split(",")) if args.only else None
     steps = 1200 if args.quick else 4000
@@ -41,11 +50,17 @@ def main() -> None:
 
     from benchmarks import common
 
+    failures = []
+
     def section(suite, fn):
         common.drain_results()  # a fresh collection window per suite
         fn()
+        rows = common.drain_results()
+        if args.check:  # diff BEFORE --json overwrites the baseline file
+            failures.extend(
+                common.check_against_baseline(suite, rows, tol=args.tol))
         if args.json:
-            common.write_json(suite)
+            common.write_json(suite, rows=rows)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -84,6 +99,13 @@ def main() -> None:
         section("roofline",
                 lambda: roofline.run(write_md="experiments/roofline_table.md"))
     print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.check:
+        if failures:
+            print("# PERF REGRESSIONS:", file=sys.stderr)
+            for f in failures:
+                print(f"#   {f}", file=sys.stderr)
+            sys.exit(1)
+        print("# perf check passed", file=sys.stderr)
 
 
 if __name__ == "__main__":

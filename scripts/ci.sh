@@ -6,3 +6,8 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS=cpu
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q -m "not slow" "$@"
+# perf-regression gate: fresh advance_all timings vs committed BENCH_engine.json.
+# Default --tol is 1.3x (use that when timing by hand on an idle box); CI
+# boxes share cores with the harness, so absorb scheduler noise with 1.8x.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only engine --check --tol 1.8

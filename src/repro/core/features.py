@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.env import engine
+from repro.env import engine_layout as layout
 
 REQ_FEATS = 6
 EXP_FEATS = 7
@@ -27,21 +27,21 @@ def build_obs(cfg, pool, state: dict) -> dict:
     mo = float(cfg.max_output)
     mp = float(cfg.max_prompt)
     r = state["pending"]
-    run_valid = engine.run_valid(q)
-    wait_valid = engine.wait_valid(q)
-    run_p = engine.run_p(q)
-    run_d_cur = engine.run_d_cur(q)
-    wait_pred_d = engine.wait_pred_d(q)
+    run_valid = layout.run_valid(q)
+    wait_valid = layout.wait_valid(q)
+    run_p = layout.run_p(q)
+    run_d_cur = layout.run_d_cur(q)
+    wait_pred_d = layout.wait_pred_d(q)
 
     # --- running request nodes (N, R, 6) ---
     d_cur = run_d_cur.astype(jnp.float32)
     run_mem = (run_p + run_d_cur).astype(jnp.float32) * \
         pool.mem_per_token[:, None] / pool.mem_capacity[:, None]
-    l_cur = (t - engine.run_t_arrive(q)) / jnp.maximum(d_cur, 1.0)
+    l_cur = (t - layout.run_t_arrive(q)) / jnp.maximum(d_cur, 1.0)
     run_f = jnp.stack([
         run_p.astype(jnp.float32) / mp,
-        engine.run_pred_s(q),
-        engine.run_pred_d(q) / mo,
+        layout.run_pred_s(q),
+        layout.run_pred_d(q) / mo,
         run_mem,
         d_cur / mo,
         l_cur / L,
@@ -49,10 +49,10 @@ def build_obs(cfg, pool, state: dict) -> dict:
     run_f = jnp.where(run_valid[..., None], run_f, 0.0)
 
     # --- waiting request nodes (N, W, 6) ---
-    w_wait = (t - engine.wait_t_arrive(q)) / jnp.maximum(wait_pred_d, 1.0)
+    w_wait = (t - layout.wait_t_arrive(q)) / jnp.maximum(wait_pred_d, 1.0)
     wait_f = jnp.stack([
-        engine.wait_p(q).astype(jnp.float32) / mp,
-        engine.wait_pred_s(q),
+        layout.wait_p(q).astype(jnp.float32) / mp,
+        layout.wait_pred_s(q),
         wait_pred_d / mo,
         jnp.zeros_like(w_wait),            # not yet resident in memory
         jnp.zeros_like(w_wait),            # d_{j,t} = 0

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sac as sac_lib
-from repro.env import engine
+from repro.env import engine_layout as layout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,8 +48,8 @@ def shortest_queue(n_experts: int) -> Policy:
 
     def act(pstate, env_state, obs, key):
         q = env_state["queues"]
-        qlen = (jnp.sum(engine.run_valid(q), -1)
-                + jnp.sum(engine.wait_valid(q), -1))
+        qlen = (jnp.sum(layout.run_valid(q), -1)
+                + jnp.sum(layout.wait_valid(q), -1))
         return jnp.argmin(qlen).astype(jnp.int32) + 1, pstate
 
     return Policy("SQF", init_state, act)
@@ -77,8 +77,8 @@ def quality_least_loaded(slack: int = 2) -> Policy:
 
     def act(pstate, env_state, obs, key):
         q = env_state["queues"]
-        qlen = (jnp.sum(engine.run_valid(q), -1)
-                + jnp.sum(engine.wait_valid(q), -1))
+        qlen = (jnp.sum(layout.run_valid(q), -1)
+                + jnp.sum(layout.wait_valid(q), -1))
         ok = qlen <= jnp.min(qlen) + slack
         pred = env_state["pending"]["pred_s"]
         return jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1, pstate

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 # logical axis names
 FSDP = "fsdp"   # data(+pod) sharding of params
 TP = "tp"       # model axis
+EXPERT = "expert"  # scheduling-engine expert axis (edge-expert fleet)
 
 # name -> logical spec of the trailing dims (longest match wins)
 _PARAM_RULES = {
@@ -128,6 +129,19 @@ def shard_params_specs(param_shapes, mesh: Mesh, *, train: bool):
     def one(path, x):
         return NamedSharding(mesh, param_spec(path, x.shape, mesh, train=train))
     return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def expert_spec(mesh: Mesh, n_experts: int, ndim: int = 1) -> PartitionSpec:
+    """Engine-state sharding (used by ``engine.advance_all`` shard_map):
+    dim 0 — the packed expert axis of the scheduling engine's (N, R/W, CH)
+    queue tensors, (N,) clocks and pool scalars — over the ``expert`` mesh
+    axis when present and divisible, trailing slot/channel dims
+    replicated."""
+    spec = [None] * ndim
+    if EXPERT in mesh.shape and mesh.shape[EXPERT] > 1 \
+            and n_experts % mesh.shape[EXPERT] == 0:
+        spec[0] = EXPERT
+    return PartitionSpec(*spec)
 
 
 def batch_axes(mesh: Mesh, batch_size: int) -> Optional[Tuple[str, ...]]:

@@ -4,8 +4,8 @@ Fig. 3 / Orca [11] semantics):
 Each expert keeps a fixed-capacity waiting queue and running queue (masked
 arrays).  One engine iteration either
 
-  1. *prefills* the oldest waiting request (if a running slot is free and
-     GPU memory admits it): local clock += k1 * p; request joins the running
+  1. *prefills* a waiting request (if a running slot is free and GPU
+     memory admits it): local clock += k1 * p; request joins the running
      queue having produced its first token, or
   2. *decodes* every running request in parallel:
      local clock += k2 * sum(p_i + d_i,t); each d_i,t += 1; finished
@@ -14,24 +14,47 @@ arrays).  One engine iteration either
 
 Memory model: C_{j,n,t} = mem_per_token * (p_j + d_{j,t})  (Eq. 4).
 
-Packed SoA queue layout
------------------------
-Queue state is four tensors instead of 17 named arrays (the seed layout,
-preserved in ``repro.env.engine_ref`` as the semantic oracle):
+Engine layer split
+------------------
+  * ``repro.env.engine_layout``     — packed SoA channel layout, accessors,
+    ``empty_queues``/``push_wait``/``mem_used`` (re-exported here).
+  * ``repro.env.engine`` (this)     — the lockstep semantics as a pure
+    per-shard function ``advance_shard`` plus the backend dispatch
+    ``advance_all(..., backend=...)``.
+  * ``repro.kernels.lockstep_advance`` — Pallas kernel fusing the masked
+    admit/decode/idle body over an expert block (``backend="pallas"``).
 
-    run_i   (N, R, RUN_I_CH)  int32    [valid, p, d_true, d_cur]
-    run_f   (N, R, RUN_F_CH)  float32  [score, pred_s, pred_d, t_arrive, t_admit]
-    wait_i  (N, W, WAIT_I_CH) int32    [valid, p, d_true]
-    wait_f  (N, W, WAIT_F_CH) float32  [score, pred_s, pred_d, t_arrive]
+Backends
+--------
+``advance_all(..., backend=...)`` selects how the lockstep loop runs:
 
-``valid`` is stored as 0/1 int32; the ``run_valid``/``wait_valid`` accessors
-below return bools.  Invalid slots may hold stale field values — every
-consumer must mask through the valid channel, never read raw slots.
+  * ``"xla"``       — one ``lax.while_loop`` over all N experts on the
+    current device (the PR 1 engine; default).
+  * ``"pallas"``    — the fused ``lockstep_advance`` kernel, gridded over
+    expert blocks (interpret mode off-TPU).
+  * ``"shard_map"`` — the expert axis is split across the devices of an
+    ``("expert",)`` mesh (``launch.mesh.make_expert_mesh``); each device
+    runs ``advance_shard`` on its rows and only the per-expert completion
+    accumulators are all-gathered back to every device.  Queue tensors and
+    clocks stay device-local between calls.
+
+All backends are bit-identical to ``engine_ref`` (the seed vmap engine);
+asserted in ``tests/test_engine_equiv.py``.
+
+Admission order
+---------------
+``admit_order`` picks which waiting request an admission pops:
+
+  * ``"fifo"`` — the oldest waiter (smallest ``t_arrive``; the paper's and
+    the seed engine's behaviour), or
+  * ``"qos"``  — the waiter with the highest predicted score ``pred_s``
+    (QoS-weighted admission, a paper follow-on; ties fall back to the
+    lowest slot index in both modes).
 
 Lockstep advance
 ----------------
-``advance_all`` runs a SINGLE ``lax.while_loop`` over all N experts in
-lockstep (instead of the seed's vmap-of-while_loop whose body built two
+``advance_shard`` runs a SINGLE ``lax.while_loop`` over its shard's experts
+in lockstep (instead of the seed's vmap-of-while_loop whose body built two
 full candidate queue dicts and merged them with 3-way ``jnp.where`` over
 the whole tree).  Invariants:
 
@@ -40,18 +63,15 @@ the whole tree).  Invariants:
     (``clock >= t_next`` or no work);
   * actions only touch an expert's own rows, so the per-expert action
     sequence is identical to running the seed's per-expert loop, and the
-    loop trip count is the max over experts (same as vmap-of-while);
+    loop trip count is the max over the shard (same as vmap-of-while);
   * updates are masked in-place channel writes; no candidate queue
     dicts are materialized;
   * the wait side is loop-invariant except its valid bit (admission pops
-    the head; new entries only arrive between advances via the env), so
+    one waiter; new entries only arrive between advances via the env), so
     the while-loop carries just the (N, W) wait-valid mask and closes
     over the wait tensors;
   * after the loop every clock is clamped to ``t_next`` (idle experts
     jump forward).
-
-The equivalence is asserted bit-for-bit against ``engine_ref`` in
-``tests/test_engine_equiv.py``.
 """
 from __future__ import annotations
 
@@ -60,140 +80,46 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.env.engine_layout import (  # noqa: F401  (re-exported layout API)
+    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RUN_I_CH,
+    RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
+    WI_VALID, WI_P, WI_D_TRUE, WAIT_I_CH,
+    WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE, WAIT_F_CH,
+    empty_queues, push_wait, mem_used,
+    run_valid, run_p, run_d_true, run_d_cur, run_score, run_pred_s,
+    run_pred_d, run_t_arrive, run_t_admit,
+    wait_valid, wait_p, wait_d_true, wait_score, wait_pred_s, wait_pred_d,
+    wait_t_arrive,
+)
 from repro.env.profiles import ExpertPool
 
 INF = jnp.float32(1e30)
 
-# Channel indices for the packed layout (see module docstring).
-RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR = 0, 1, 2, 3
-RUN_I_CH = 4
-RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT = 0, 1, 2, 3, 4
-RUN_F_CH = 5
-WI_VALID, WI_P, WI_D_TRUE = 0, 1, 2
-WAIT_I_CH = 3
-WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE = 0, 1, 2, 3
-WAIT_F_CH = 4
+BACKENDS = ("xla", "pallas", "shard_map")
+ADMIT_ORDERS = ("fifo", "qos")
 
 
-def empty_queues(n: int, r: int, w: int) -> dict:
-    return {
-        "run_i": jnp.zeros((n, r, RUN_I_CH), jnp.int32),
-        "run_f": jnp.zeros((n, r, RUN_F_CH), jnp.float32),
-        "wait_i": jnp.zeros((n, w, WAIT_I_CH), jnp.int32),
-        "wait_f": jnp.zeros((n, w, WAIT_F_CH), jnp.float32),
-    }
+def pool_params(pool: ExpertPool) -> dict:
+    """The per-expert (N,) scalars the lockstep body needs."""
+    return {"k1": pool.k1, "k2": pool.k2,
+            "mem_capacity": pool.mem_capacity,
+            "mem_per_token": pool.mem_per_token}
 
 
-# ---------------------------------------------------------------------------
-# Thin accessors — keep features.build_obs, routers and tests readable.
-# ---------------------------------------------------------------------------
-
-
-def run_valid(q: dict) -> jax.Array:
-    return q["run_i"][..., RI_VALID].astype(jnp.bool_)
-
-
-def run_p(q: dict) -> jax.Array:
-    return q["run_i"][..., RI_P]
-
-
-def run_d_true(q: dict) -> jax.Array:
-    return q["run_i"][..., RI_D_TRUE]
-
-
-def run_d_cur(q: dict) -> jax.Array:
-    return q["run_i"][..., RI_D_CUR]
-
-
-def run_score(q: dict) -> jax.Array:
-    return q["run_f"][..., RF_SCORE]
-
-
-def run_pred_s(q: dict) -> jax.Array:
-    return q["run_f"][..., RF_PRED_S]
-
-
-def run_pred_d(q: dict) -> jax.Array:
-    return q["run_f"][..., RF_PRED_D]
-
-
-def run_t_arrive(q: dict) -> jax.Array:
-    return q["run_f"][..., RF_T_ARRIVE]
-
-
-def run_t_admit(q: dict) -> jax.Array:
-    return q["run_f"][..., RF_T_ADMIT]
-
-
-def wait_valid(q: dict) -> jax.Array:
-    return q["wait_i"][..., WI_VALID].astype(jnp.bool_)
-
-
-def wait_p(q: dict) -> jax.Array:
-    return q["wait_i"][..., WI_P]
-
-
-def wait_d_true(q: dict) -> jax.Array:
-    return q["wait_i"][..., WI_D_TRUE]
-
-
-def wait_score(q: dict) -> jax.Array:
-    return q["wait_f"][..., WF_SCORE]
-
-
-def wait_pred_s(q: dict) -> jax.Array:
-    return q["wait_f"][..., WF_PRED_S]
-
-
-def wait_pred_d(q: dict) -> jax.Array:
-    return q["wait_f"][..., WF_PRED_D]
-
-
-def wait_t_arrive(q: dict) -> jax.Array:
-    return q["wait_f"][..., WF_T_ARRIVE]
-
-
-def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
-              score: jax.Array, pred_s: jax.Array, pred_d: jax.Array,
-              t: jax.Array, gate=True) -> Tuple[dict, jax.Array]:
-    """Masked push of one request into expert ``n``'s first free waiting
-    slot (no-op when the queue is full or ``gate`` is False).  The single
-    place that knows the wait-side channel order; returns (queues, pushed)."""
-    free = ~wait_valid(q)[n]
-    pushed = jnp.any(free) & gate
-    slot = jnp.argmax(free)
-    new_i = jnp.stack([pushed.astype(jnp.int32),
-                       jnp.asarray(p, jnp.int32),
-                       jnp.asarray(d_true, jnp.int32)])
-    new_f = jnp.stack([jnp.asarray(score, jnp.float32),
-                       jnp.asarray(pred_s, jnp.float32),
-                       jnp.asarray(pred_d, jnp.float32),
-                       jnp.asarray(t, jnp.float32)])
-    q = {
-        **q,
-        "wait_i": q["wait_i"].at[n, slot].set(
-            jnp.where(pushed, new_i, q["wait_i"][n, slot])),
-        "wait_f": q["wait_f"].at[n, slot].set(
-            jnp.where(pushed, new_f, q["wait_f"][n, slot])),
-    }
-    return q, pushed
-
-
-def mem_used(q: dict, mem_per_token: jax.Array) -> jax.Array:
-    """(N,) bytes currently resident per expert."""
-    tok = jnp.where(run_valid(q), run_p(q) + run_d_cur(q), 0)
-    return jnp.sum(tok, axis=-1).astype(jnp.float32) * mem_per_token
-
-
-def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
-                clocks: jax.Array, t_next: jax.Array) -> Tuple[dict, jax.Array, dict]:
-    """Advance all N experts in lockstep until every clock reaches ``t_next``.
+def advance_shard(params: dict, latency_L: float, queues: dict,
+                  clocks: jax.Array, t_next: jax.Array, *,
+                  admit_order: str = "fifo") -> Tuple[dict, jax.Array, dict]:
+    """Advance one shard of experts in lockstep until every clock reaches
+    ``t_next``.  Pure function of (N,)-leading tensors — N here is the
+    shard's expert count, so the same body serves the single-device
+    ``"xla"`` backend and the per-device body under ``shard_map``.
 
     Returns (queues, clocks, acc) with acc entries shaped (N,) summing
     completion stats in the window: phi / lat / score / wait / done / viol.
     """
-    k1, k2 = pool.k1, pool.k2                              # (N,)
-    cap, mpt = pool.mem_capacity, pool.mem_per_token       # (N,)
+    assert admit_order in ADMIT_ORDERS, admit_order
+    k1, k2 = params["k1"], params["k2"]                    # (N,)
+    cap, mpt = params["mem_capacity"], params["mem_per_token"]
     n = k1.shape[0]
     r_cap = queues["run_i"].shape[1]
     w_cap = queues["wait_i"].shape[1]
@@ -208,7 +134,8 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
     # between advances), so the loop closes over wait_i/wait_f and carries
     # only the (N, W) valid mask.
     wait_i0, wait_f0 = queues["wait_i"], queues["wait_f"]
-    wait_t_arr0 = wait_f0[..., WF_T_ARRIVE]
+    w_sort_key = (wait_f0[..., WF_T_ARRIVE] if admit_order == "fifo"
+                  else -wait_f0[..., WF_PRED_S])
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -228,8 +155,8 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
         mem = run_tokens * mpt
 
         # choose action per expert: admit > decode > idle
-        w_key = jnp.where(wvalidb, wait_t_arr0, INF)
-        w_idx = jnp.argmin(w_key, -1)                      # (N,) oldest waiter
+        w_key = jnp.where(wvalidb, w_sort_key, INF)
+        w_idx = jnp.argmin(w_key, -1)                      # (N,) next waiter
         w_has = jnp.any(wvalidb, -1)
         r_free = jnp.argmin(validb, -1)                    # (N,) first empty slot
         r_has_space = ~jnp.all(validb, -1)
@@ -265,7 +192,7 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
         }
         valid_after = validb & ~finished
 
-        # --- admit: masked scatter of the queue head into slot r_free ---
+        # --- admit: masked scatter of the chosen waiter into slot r_free ---
         slot_oh = adm[:, None] & (run_slots == r_free[:, None])     # (N, R)
         run_i = jnp.stack([
             (valid_after | slot_oh).astype(jnp.int32),
@@ -296,3 +223,78 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
               "wait_i": wait_i0.at[..., WI_VALID].set(wvalidb.astype(jnp.int32)),
               "wait_f": wait_f0}
     return queues, clocks, acc
+
+
+def _advance_shard_map(params: dict, latency_L: float, queues: dict,
+                       clocks: jax.Array, t_next: jax.Array, *,
+                       admit_order: str, mesh) -> Tuple[dict, jax.Array, dict]:
+    """Expert-axis sharded advance: each device of the mesh's ``expert``
+    axis runs ``advance_shard`` on its (N/devices)-row shard; only the
+    per-expert completion accumulators cross devices (one tiled
+    all-gather), queue tensors and clocks stay device-local."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.distributed import sharding
+
+    axis = sharding.EXPERT
+    n = clocks.shape[0]
+    n_shards = mesh.shape[axis]
+    if n % n_shards != 0:
+        raise ValueError(
+            f"n_experts={n} not divisible by mesh axis '{axis}'={n_shards}")
+
+    e_spec = lambda x: sharding.expert_spec(mesh, n, x.ndim)
+
+    def body(params, queues, clocks, t_next):
+        q, c, acc = advance_shard(params, latency_L, queues, clocks, t_next,
+                                  admit_order=admit_order)
+        acc = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis, tiled=True), acc)
+        return q, c, acc
+
+    fn = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree.map(e_spec, params), jax.tree.map(e_spec, queues),
+                  e_spec(clocks), P()),
+        out_specs=(jax.tree.map(e_spec, queues), e_spec(clocks),
+                   {k: P() for k in
+                    ("phi", "lat", "score", "wait", "done", "viol")}),
+        check_vma=False)
+    return fn(params, queues, clocks, t_next)
+
+
+def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
+                clocks: jax.Array, t_next: jax.Array, *,
+                backend: str = "xla", admit_order: str = "fifo",
+                mesh=None, block_n: int = 128,
+                ) -> Tuple[dict, jax.Array, dict]:
+    """Advance all N experts to ``t_next`` on the selected backend (see the
+    module docstring).  ``mesh`` (shard_map only) defaults to a 1-D
+    ``("expert",)`` mesh over all local devices; ``block_n`` (pallas only)
+    is the kernel's expert block size.
+
+    Returns (queues, clocks, acc) with acc entries shaped (N,).
+    """
+    if admit_order not in ADMIT_ORDERS:  # validate before any dispatch: the
+        # pallas path compares the raw string, so a typo must not silently
+        # fall through to qos ordering
+        raise ValueError(f"unknown admit_order {admit_order!r}; "
+                         f"expected one of {ADMIT_ORDERS}")
+    params = pool_params(pool)
+    if backend == "xla":
+        return advance_shard(params, latency_L, queues, clocks, t_next,
+                             admit_order=admit_order)
+    if backend == "pallas":
+        from repro.kernels.lockstep_advance.ops import lockstep_advance
+        return lockstep_advance(params, queues, clocks, t_next,
+                                latency_L=float(latency_L),
+                                admit_order=admit_order, block_n=block_n)
+    if backend == "shard_map":
+        if mesh is None:
+            from repro.launch.mesh import make_expert_mesh
+            mesh = make_expert_mesh()
+        return _advance_shard_map(params, latency_L, queues, clocks, t_next,
+                                  admit_order=admit_order, mesh=mesh)
+    raise ValueError(f"unknown engine backend {backend!r}; "
+                     f"expected one of {BACKENDS}")

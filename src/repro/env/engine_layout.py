@@ -1,0 +1,150 @@
+"""Packed SoA queue layout for the scheduling engine (layout layer).
+
+Queue state is four tensors instead of the seed's 17 named arrays
+(preserved in ``repro.env.engine_ref`` as the semantic oracle):
+
+    run_i   (N, R, RUN_I_CH)  int32    [valid, p, d_true, d_cur]
+    run_f   (N, R, RUN_F_CH)  float32  [score, pred_s, pred_d, t_arrive, t_admit]
+    wait_i  (N, W, WAIT_I_CH) int32    [valid, p, d_true]
+    wait_f  (N, W, WAIT_F_CH) float32  [score, pred_s, pred_d, t_arrive]
+
+``valid`` is stored as 0/1 int32; the ``run_valid``/``wait_valid`` accessors
+below return bools.  Invalid slots may hold stale field values — every
+consumer must mask through the valid channel, never read raw slots.
+
+This module is the ONLY place that knows the channel order.  Everything
+outside the engine/kernel layer (``core/features.py``, ``core/routers.py``,
+``env.impact_penalty``, tests) consumes queues exclusively through the
+accessors, so the leading expert axis can be sharded across devices
+(``engine.advance_all(backend="shard_map")``) without those consumers
+caring where the rows live.
+
+The lockstep semantics live in ``repro.env.engine``; the fused Pallas body
+lives in ``repro.kernels.lockstep_advance``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Channel indices for the packed layout (see module docstring).
+RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR = 0, 1, 2, 3
+RUN_I_CH = 4
+RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT = 0, 1, 2, 3, 4
+RUN_F_CH = 5
+WI_VALID, WI_P, WI_D_TRUE = 0, 1, 2
+WAIT_I_CH = 3
+WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE = 0, 1, 2, 3
+WAIT_F_CH = 4
+
+
+def empty_queues(n: int, r: int, w: int) -> dict:
+    return {
+        "run_i": jnp.zeros((n, r, RUN_I_CH), jnp.int32),
+        "run_f": jnp.zeros((n, r, RUN_F_CH), jnp.float32),
+        "wait_i": jnp.zeros((n, w, WAIT_I_CH), jnp.int32),
+        "wait_f": jnp.zeros((n, w, WAIT_F_CH), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Thin accessors — keep features.build_obs, routers and tests readable.
+# ---------------------------------------------------------------------------
+
+
+def run_valid(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_VALID].astype(jnp.bool_)
+
+
+def run_p(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_P]
+
+
+def run_d_true(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_D_TRUE]
+
+
+def run_d_cur(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_D_CUR]
+
+
+def run_score(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_SCORE]
+
+
+def run_pred_s(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_PRED_S]
+
+
+def run_pred_d(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_PRED_D]
+
+
+def run_t_arrive(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_T_ARRIVE]
+
+
+def run_t_admit(q: dict) -> jax.Array:
+    return q["run_f"][..., RF_T_ADMIT]
+
+
+def wait_valid(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_VALID].astype(jnp.bool_)
+
+
+def wait_p(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_P]
+
+
+def wait_d_true(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_D_TRUE]
+
+
+def wait_score(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_SCORE]
+
+
+def wait_pred_s(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_PRED_S]
+
+
+def wait_pred_d(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_PRED_D]
+
+
+def wait_t_arrive(q: dict) -> jax.Array:
+    return q["wait_f"][..., WF_T_ARRIVE]
+
+
+def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
+              score: jax.Array, pred_s: jax.Array, pred_d: jax.Array,
+              t: jax.Array, gate=True) -> Tuple[dict, jax.Array]:
+    """Masked push of one request into expert ``n``'s first free waiting
+    slot (no-op when the queue is full or ``gate`` is False).  The single
+    place that knows the wait-side channel order; returns (queues, pushed)."""
+    free = ~wait_valid(q)[n]
+    pushed = jnp.any(free) & gate
+    slot = jnp.argmax(free)
+    new_i = jnp.stack([pushed.astype(jnp.int32),
+                       jnp.asarray(p, jnp.int32),
+                       jnp.asarray(d_true, jnp.int32)])
+    new_f = jnp.stack([jnp.asarray(score, jnp.float32),
+                       jnp.asarray(pred_s, jnp.float32),
+                       jnp.asarray(pred_d, jnp.float32),
+                       jnp.asarray(t, jnp.float32)])
+    q = {
+        **q,
+        "wait_i": q["wait_i"].at[n, slot].set(
+            jnp.where(pushed, new_i, q["wait_i"][n, slot])),
+        "wait_f": q["wait_f"].at[n, slot].set(
+            jnp.where(pushed, new_f, q["wait_f"][n, slot])),
+    }
+    return q, pushed
+
+
+def mem_used(q: dict, mem_per_token: jax.Array) -> jax.Array:
+    """(N,) bytes currently resident per expert."""
+    tok = jnp.where(run_valid(q), run_p(q) + run_d_cur(q), 0)
+    return jnp.sum(tok, axis=-1).astype(jnp.float32) * mem_per_token

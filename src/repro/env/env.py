@@ -52,6 +52,10 @@ class EnvConfig:
     # instead of extrapolating the current one — young requests whose
     # l_{j,t} is dominated by waiting time stop triggering false penalties.
     impact_mode: str = "paper"
+    # scheduling-engine backend ("xla" | "pallas" | "shard_map") and
+    # wait-queue admission order ("fifo" | "qos") — see repro.env.engine.
+    engine_backend: str = "xla"
+    admit_order: str = "fifo"
 
 
 def make_env_pool(cfg: EnvConfig) -> ExpertPool:
@@ -129,7 +133,11 @@ def reset(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
 def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
                    action: jax.Array) -> jax.Array:
     """Eq. 15/16 second term: estimated QoS loss among the chosen expert's
-    running requests, using the predictors' view (pred_s, pred_d)."""
+    running requests, using the predictors' view (pred_s, pred_d).
+
+    Reads the queues only through the layout accessors (never raw channel
+    indices) so it stays agnostic to the packed layout and to where the
+    expert rows live under the sharded engine backends."""
     q = state["queues"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
     t = state["clock"]
@@ -138,11 +146,10 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
     p_j = state["pending"]["p_len"].astype(jnp.float32)
     d_j = state["pending"]["pred_d"][n]
 
-    ri, rf = q["run_i"][n], q["run_f"][n]                  # (R, CH)
-    valid = ri[:, engine.RI_VALID] > 0
-    d_cur = ri[:, engine.RI_D_CUR].astype(jnp.float32)
-    t_arrive = rf[:, engine.RF_T_ARRIVE]
-    d_hat = jnp.maximum(rf[:, engine.RF_PRED_D], d_cur + 1.0)
+    valid = engine.run_valid(q)[n]                         # (R,)
+    d_cur = engine.run_d_cur(q)[n].astype(jnp.float32)
+    t_arrive = engine.run_t_arrive(q)[n]
+    d_hat = jnp.maximum(engine.run_pred_d(q)[n], d_cur + 1.0)
     rem = jnp.maximum(d_hat - d_cur, 0.0)
     K = jnp.minimum(rem, d_j)
     # Eq. 15 numerator: k1*p_j + k2 * sum_{k=1..K}(p_j + k)
@@ -154,13 +161,11 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
     else:  # "projected": estimate the FINAL avg latency per token instead
         elapsed = t - t_arrive
         queue_tokens = jnp.sum(jnp.where(
-            valid,
-            (ri[:, engine.RI_P] + ri[:, engine.RI_D_CUR]).astype(jnp.float32),
-            0.0))
+            valid, engine.run_p(q)[n].astype(jnp.float32) + d_cur, 0.0))
         est_remaining = rem * k2 * queue_tokens
         l_est = (elapsed + est_remaining + extra) / jnp.maximum(d_hat, 1.0)
     would_violate = valid & (l_est >= cfg.latency_L)
-    penalty = jnp.sum(jnp.where(would_violate, rf[:, engine.RF_PRED_S], 0.0))
+    penalty = jnp.sum(jnp.where(would_violate, engine.run_pred_s(q)[n], 0.0))
     return jnp.where(action > 0, penalty, 0.0)
 
 
@@ -191,7 +196,8 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
     t_next = state["clock"] + dt
 
     queues, clocks, acc = engine.advance_all(
-        pool, cfg.latency_L, state["queues"], state["expert_clock"], t_next)
+        pool, cfg.latency_L, state["queues"], state["expert_clock"], t_next,
+        backend=cfg.engine_backend, admit_order=cfg.admit_order)
     acc = jax.tree.map(lambda x: jnp.sum(x), acc)  # sum over experts
 
     reward = acc["phi"] - penalty - cfg.drop_penalty * dropped

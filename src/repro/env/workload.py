@@ -38,9 +38,15 @@ def current_rate(cfg: WorkloadConfig, state: dict, t: jax.Array) -> jax.Array:
     diurnal = 1.0 + cfg.diurnal_amp * jnp.sin(
         2.0 * jnp.pi * t / cfg.diurnal_period)
     burst = jnp.where(state["burst"], cfg.burst_rate_mult, 1.0)
-    # normalize so the long-run mean stays ~cfg.rate
+    # Normalize so the long-run mean arrival rate stays ~cfg.rate
+    # (tests/test_workload.py pins it within 10%).  The Markov chain flips
+    # per ARRIVAL, so p_on is the stationary fraction of arrivals (not of
+    # wall-clock) spent bursting; each burst arrival occupies 1/mult as
+    # much time, so the divisor must be the TIME-weighted rate multiplier.
     p_on = cfg.burst_on_prob / (cfg.burst_on_prob + cfg.burst_off_prob)
-    norm = 1.0 + p_on * (cfg.burst_rate_mult - 1.0)
+    t_burst = p_on / cfg.burst_rate_mult
+    time_frac = t_burst / (t_burst + (1.0 - p_on))
+    norm = 1.0 + time_frac * (cfg.burst_rate_mult - 1.0)
     return cfg.rate * diurnal * burst / norm
 
 

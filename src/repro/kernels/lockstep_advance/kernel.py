@@ -1,0 +1,221 @@
+"""Pallas lockstep-advance kernel for the scheduling engine.
+
+Fuses the masked admit/decode/idle body of ``repro.env.engine.advance_shard``
+over an expert block: grid is (N / block_n,) and each program runs the
+whole data-dependent ``while_loop`` for its block with every queue tensor
+resident in VMEM — the XLA backend instead streams the (N, R/W, CH)
+tensors through HBM on every loop iteration.  Because lockstep actions
+only touch an expert's own rows, a per-block loop (trip count = max over
+the block) replays exactly the same per-expert action sequence as the
+global loop (trip count = max over all N), so results are bit-identical;
+blocks with fast-draining experts simply stop earlier, doing strictly
+less masked work than the global loop.
+
+TPU portability notes (vs the jnp body in ``engine.advance_shard``):
+
+  * ``argmin`` / ``take_along_axis`` are replaced with broadcasted-iota
+    min-index selection and one-hot masked reductions (no gathers), with
+    the same first-index tie-breaking;
+  * the per-expert accumulator dict becomes a dense (block_n, 6) float32
+    tensor (channel order ``ops.ACC_KEYS``);
+  * clocks ride as (N, 1) so every operand is >= 2-D.
+
+Off-TPU the kernel runs in interpret mode (see ``ops.lockstep_advance``,
+which also carries the ``use_pallas`` escape hatch and the ``ref.py``
+oracle = the engine's XLA loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.env.engine_layout import (
+    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR,
+    RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
+    WI_VALID, WI_P, WI_D_TRUE,
+    WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE,
+)
+
+# python float (not a jnp scalar: pallas_call forbids captured constants)
+INF = 1e30
+N_ACC = 6  # phi, lat, score, wait, done, viol  (ops.ACC_KEYS order)
+
+
+def _first_index(mask: jax.Array, iota: jax.Array, size: int) -> jax.Array:
+    """Lowest index with mask True (== argmax semantics on bool), else a
+    value >= size.  Gather-free; safe on the TPU vector unit."""
+    return jnp.min(jnp.where(mask, iota, size), axis=-1)
+
+
+def _onehot_pick(sel: jax.Array, field: jax.Array) -> jax.Array:
+    """(B, W) one-hot selector x (B, W) field -> (B,) selected value."""
+    zero = jnp.zeros((), field.dtype)
+    return jnp.sum(jnp.where(sel, field, zero), axis=-1)
+
+
+def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
+                     par_ref, clk_ref,
+                     run_i_out, run_f_out, wvalid_out, clk_out, acc_out,
+                     *, latency_L: float, admit_order: str):
+    t_next = tn_ref[0, 0]
+    run_i0 = run_i_ref[...]                                # (B, R, CI) int32
+    run_f0 = run_f_ref[...]                                # (B, R, CF) f32
+    wait_i0 = wait_i_ref[...]                              # (B, W, CI) int32
+    wait_f0 = wait_f_ref[...]                              # (B, W, CF) f32
+    par = par_ref[...]                                     # (B, 4) f32
+    clocks0 = clk_ref[...][:, 0]                           # (B,)
+    k1, k2 = par[:, 0], par[:, 1]
+    cap, mpt = par[:, 2], par[:, 3]
+
+    bn, r_cap = run_i0.shape[0], run_i0.shape[1]
+    w_cap = wait_i0.shape[1]
+    run_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, r_cap), 1)
+    wait_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, w_cap), 1)
+
+    # wait side: fields are loop-invariant, only the valid bit is carried
+    wait_p0 = wait_i0[..., WI_P]
+    wait_d_true0 = wait_i0[..., WI_D_TRUE]
+    w_sort_key = (wait_f0[..., WF_T_ARRIVE] if admit_order == "fifo"
+                  else -wait_f0[..., WF_PRED_S])
+
+    def active_mask(run_i, wvalidb, clocks):
+        has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
+        return (clocks < t_next) & has_work
+
+    def cond(c):
+        return jnp.any(c[5])
+
+    def body(c):
+        run_i, run_f, wvalidb, clocks, acc, active = c
+        validb = run_i[..., RI_VALID] > 0                  # (B, R)
+        p = run_i[..., RI_P]
+        d_true = run_i[..., RI_D_TRUE]
+        d_cur = run_i[..., RI_D_CUR]
+
+        run_tokens = jnp.sum(jnp.where(validb, p + d_cur, 0), -1)   # (B,)
+        mem = run_tokens * mpt
+
+        # choose action per expert: admit > decode > idle
+        w_key = jnp.where(wvalidb, w_sort_key, INF)
+        min_key = jnp.min(w_key, axis=-1, keepdims=True)
+        w_idx = _first_index(w_key == min_key, wait_iota, w_cap)    # (B,)
+        w_has = jnp.any(wvalidb, -1)
+        r_free = _first_index(~validb, run_iota, r_cap)             # (B,)
+        r_has_space = ~jnp.all(validb, -1)
+        head_sel = wait_iota == w_idx[:, None]                      # (B, W)
+        head_p = _onehot_pick(head_sel, wait_p0)
+        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
+        can_admit = w_has & r_has_space & fits
+        r_has = jnp.any(validb, -1)
+
+        adm = active & can_admit
+        dec = active & ~can_admit & r_has
+        idle = active & ~can_admit & ~r_has
+
+        # --- decode: masked in-place over this iteration's decoding rows ---
+        dec_rows = dec[:, None] & validb                   # (B, R)
+        d_new = d_cur + dec_rows.astype(jnp.int32)
+        finished = dec_rows & (d_new >= d_true)
+        clock_dec = clocks + k2 * run_tokens.astype(jnp.float32)
+        lat = (clock_dec[:, None] - run_f[..., RF_T_ARRIVE]) / jnp.maximum(
+            d_true.astype(jnp.float32), 1.0)
+        ok = (lat <= latency_L).astype(jnp.float32)
+        fin = finished.astype(jnp.float32)
+        score = run_f[..., RF_SCORE]
+        acc = acc + jnp.stack([
+            jnp.sum(fin * (score * ok), -1),
+            jnp.sum(fin * lat, -1),
+            jnp.sum(fin * score, -1),
+            jnp.sum(fin * (run_f[..., RF_T_ADMIT] - run_f[..., RF_T_ARRIVE]),
+                    -1),
+            jnp.sum(fin, -1),
+            jnp.sum(fin * (1.0 - ok), -1),
+        ], axis=-1)                                        # (B, 6)
+        valid_after = validb & ~finished
+
+        # --- admit: masked scatter of the chosen waiter into slot r_free ---
+        slot_oh = adm[:, None] & (run_iota == r_free[:, None])      # (B, R)
+        head_d_true = _onehot_pick(head_sel, wait_d_true0)
+        run_i = jnp.stack([
+            (valid_after | slot_oh).astype(jnp.int32),
+            jnp.where(slot_oh, head_p[:, None], p),
+            jnp.where(slot_oh, head_d_true[:, None], d_true),
+            jnp.where(slot_oh, 1, d_new),                  # prefill emits y1
+        ], axis=-1)
+        adm_f = jnp.stack([
+            _onehot_pick(head_sel, wait_f0[..., WF_SCORE]),
+            _onehot_pick(head_sel, wait_f0[..., WF_PRED_S]),
+            _onehot_pick(head_sel, wait_f0[..., WF_PRED_D]),
+            _onehot_pick(head_sel, wait_f0[..., WF_T_ARRIVE]),
+            clocks,
+        ], axis=-1)                                        # (B, RUN_F_CH)
+        run_f = jnp.where(slot_oh[..., None], adm_f[:, None, :], run_f)
+        head_oh = adm[:, None] & head_sel                  # (B, W)
+        wvalidb = wvalidb & ~head_oh
+
+        clock_adm = clocks + k1 * head_p.astype(jnp.float32)
+        clocks = jnp.where(adm, clock_adm,
+                           jnp.where(dec, clock_dec,
+                                     jnp.where(idle, t_next, clocks)))
+        return (run_i, run_f, wvalidb, clocks, acc,
+                active_mask(run_i, wvalidb, clocks))
+
+    wvalid0 = wait_i0[..., WI_VALID] > 0
+    acc0 = jnp.zeros((bn, N_ACC), jnp.float32)
+    run_i, run_f, wvalidb, clocks, acc, _ = jax.lax.while_loop(
+        cond, body, (run_i0, run_f0, wvalid0, clocks0, acc0,
+                     active_mask(run_i0, wvalid0, clocks0)))
+
+    run_i_out[...] = run_i
+    run_f_out[...] = run_f
+    wvalid_out[...] = wvalidb.astype(jnp.int32)
+    clk_out[...] = jnp.maximum(clocks, t_next)[:, None]  # idle jump forward
+    acc_out[...] = acc
+
+
+def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
+                          *, latency_L: float, admit_order: str,
+                          block_n: int, interpret: bool = False):
+    """Raw pallas_call over expert blocks.
+
+    run_i (N, R, CI) i32 | run_f (N, R, CF) f32 | wait_i (N, W, CI) i32 |
+    wait_f (N, W, CF) f32 | par (N, 4) f32 [k1, k2, cap, mpt] |
+    clocks (N, 1) f32 | t_next (1, 1) f32.  N must divide by block_n.
+
+    Returns (run_i, run_f, wait_valid (N, W) i32, clocks (N, 1),
+    acc (N, 6) f32 in ``ops.ACC_KEYS`` order).
+    """
+    n, r_cap, ci = run_i.shape
+    w_cap = wait_i.shape[1]
+    cf = run_f.shape[2]
+    wci, wcf = wait_i.shape[2], wait_f.shape[2]
+    assert n % block_n == 0, (n, block_n)
+
+    kernel = functools.partial(_lockstep_kernel, latency_L=latency_L,
+                               admit_order=admit_order)
+    b3 = lambda rr, ch: pl.BlockSpec((block_n, rr, ch), lambda i: (i, 0, 0))
+    b2 = lambda ch: pl.BlockSpec((block_n, ch), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            b3(r_cap, ci), b3(r_cap, cf), b3(w_cap, wci), b3(w_cap, wcf),
+            b2(4), b2(1),
+        ],
+        out_specs=[
+            b3(r_cap, ci), b3(r_cap, cf), b2(w_cap), b2(1), b2(N_ACC),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, r_cap, ci), jnp.int32),
+            jax.ShapeDtypeStruct((n, r_cap, cf), jnp.float32),
+            jax.ShapeDtypeStruct((n, w_cap), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, N_ACC), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t_next, run_i, run_f, wait_i, wait_f, par, clocks)

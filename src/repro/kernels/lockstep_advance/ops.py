@@ -1,0 +1,68 @@
+"""Jitted wrapper for the lockstep-advance kernel (engine ``"pallas"``
+backend).
+
+Dispatch mirrors the repo's kernel idiom: ``use_pallas=False`` falls back
+to ``ref.lockstep_advance_ref`` (the engine's XLA while-loop), and off-TPU
+the kernel runs in interpret mode.  N is padded to a multiple of
+``block_n`` with inert experts (no work, zero params) that the lockstep
+loop never touches; their rows are dropped before returning.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lockstep_advance.kernel import lockstep_advance_call
+
+ACC_KEYS = ("phi", "lat", "score", "wait", "done", "viol")
+
+
+@functools.partial(jax.jit, static_argnames=("latency_L", "admit_order",
+                                             "block_n", "use_pallas",
+                                             "interpret"))
+def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
+                     t_next: jax.Array, *, latency_L: float,
+                     admit_order: str = "fifo", block_n: int = 128,
+                     use_pallas: bool = True,
+                     interpret: bool = None) -> Tuple[dict, jax.Array, dict]:
+    """Same contract as ``engine.advance_shard`` (and bit-identical to it):
+    (params, queues, clocks, t_next) -> (queues, clocks, acc)."""
+    if not use_pallas:
+        from repro.kernels.lockstep_advance.ref import lockstep_advance_ref
+        return lockstep_advance_ref(params, queues, clocks, t_next,
+                                    latency_L=latency_L,
+                                    admit_order=admit_order)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n = clocks.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    par = jnp.stack([params["k1"], params["k2"], params["mem_capacity"],
+                     params["mem_per_token"]], axis=-1).astype(jnp.float32)
+    run_i, run_f = queues["run_i"], queues["run_f"]
+    wait_i, wait_f = queues["wait_i"], queues["wait_f"]
+    clk = clocks[:, None].astype(jnp.float32)
+    if pad:
+        grow = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        run_i, run_f, wait_i, wait_f, par, clk = map(
+            grow, (run_i, run_f, wait_i, wait_f, par, clk))
+
+    run_i, run_f, wvalid, clk, acc = lockstep_advance_call(
+        run_i, run_f, wait_i, wait_f, par, clk,
+        jnp.reshape(t_next, (1, 1)).astype(jnp.float32),
+        latency_L=latency_L, admit_order=admit_order, block_n=bn,
+        interpret=interpret)
+
+    from repro.env.engine_layout import WI_VALID
+    cut = lambda x: x[:n] if pad else x
+    queues = {
+        "run_i": cut(run_i), "run_f": cut(run_f),
+        "wait_i": queues["wait_i"].at[..., WI_VALID].set(cut(wvalid)),
+        "wait_f": queues["wait_f"],
+    }
+    acc = {k: cut(acc)[:, i] for i, k in enumerate(ACC_KEYS)}
+    return queues, cut(clk)[:, 0], acc

@@ -1,0 +1,23 @@
+"""Oracle for the lockstep-advance kernel: the engine's XLA while-loop.
+
+The lockstep semantics themselves live in ``repro.env.engine.advance_shard``
+(this repo's kernel idiom keeps a ``ref.py`` per kernel; here the reference
+IS the engine's ``"xla"`` backend, re-exposed under the kernel package so
+``tests/test_kernels.py``-style sweeps and ``ops.lockstep_advance(...,
+use_pallas=False)`` have a local oracle to diff against).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.env.engine import advance_shard
+
+
+def lockstep_advance_ref(params: dict, queues: dict, clocks: jax.Array,
+                         t_next: jax.Array, *, latency_L: float,
+                         admit_order: str = "fifo",
+                         ) -> Tuple[dict, jax.Array, dict]:
+    return advance_shard(params, latency_L, queues, clocks, t_next,
+                         admit_order=admit_order)

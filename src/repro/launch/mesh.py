@@ -7,6 +7,8 @@ import to obtain placeholder devices.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 
@@ -26,6 +28,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh_compat(shape, axes)
+
+
+@functools.lru_cache(maxsize=None)
+def _expert_mesh_cached(n: int):
+    return make_mesh_compat((n,), ("expert",))
+
+
+def make_expert_mesh(n_devices: int = None):
+    """1-D mesh over the ``expert`` logical axis (scheduling-engine expert
+    sharding, `engine.advance_all(backend="shard_map")`).  Defaults to all
+    local devices; cached so jitted engine steps can call it freely."""
+    return _expert_mesh_cached(n_devices or len(jax.devices()))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):

@@ -1,7 +1,9 @@
-"""Engine-equivalence regression: the lockstep packed-SoA engine must
-reproduce the seed engine (`repro.env.engine_ref`) exactly — same
-completions, QoS, clocks and queue contents — on hundreds of Poisson
-steps with admissions interleaved."""
+"""Engine-equivalence regression: every backend of the lockstep packed-SoA
+engine — "xla" (single-device while-loop), "pallas" (fused
+lockstep_advance kernel, interpret mode off-TPU) and "shard_map" (expert
+axis split over the host mesh) — must reproduce the seed engine
+(`repro.env.engine_ref`) exactly: same completions, QoS, clocks and queue
+contents on hundreds of Poisson steps with admissions interleaved."""
 import functools
 
 import jax
@@ -14,6 +16,7 @@ from repro.env import engine, engine_ref, profiles
 N, R, W = 6, 4, 4
 STEPS = 300
 LAT_L = 0.030
+BACKENDS = ("xla", "pallas", "shard_map")
 
 
 def _arrival_stream(steps: int, seed: int = 0):
@@ -73,29 +76,39 @@ def _drive(pool, stream, empty_queues, admit, advance):
     return q, clocks, clock_trace, acc_trace
 
 
+def _drive_backend(pool, stream, backend, admit_order="fifo"):
+    advance = functools.partial(engine.advance_all, backend=backend,
+                                admit_order=admit_order)
+    return jax.jit(functools.partial(
+        _drive, pool, stream, engine.empty_queues, _admit_packed, advance))()
+
+
 @pytest.fixture(scope="module")
 def traces():
     pool = profiles.make_pool(N)
     stream = _arrival_stream(STEPS)
-    ref = jax.jit(functools.partial(
+    out = {"ref": jax.jit(functools.partial(
         _drive, pool, stream, engine_ref.empty_queues, _admit_named,
-        engine_ref.advance_all))()
-    new = jax.jit(functools.partial(
-        _drive, pool, stream, engine.empty_queues, _admit_packed,
-        engine.advance_all))()
-    return ref, new
+        engine_ref.advance_all))()}
+    for backend in BACKENDS:
+        out[backend] = _drive_backend(pool, stream, backend)
+    return out
 
 
-def test_clocks_identical(traces):
-    (_, ref_clocks, ref_trace, _), (_, new_clocks, new_trace, _) = traces
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clocks_identical(traces, backend):
+    (_, ref_clocks, ref_trace, _) = traces["ref"]
+    (_, new_clocks, new_trace, _) = traces[backend]
     np.testing.assert_allclose(np.asarray(ref_trace), np.asarray(new_trace),
                                rtol=0, atol=1e-6)
     np.testing.assert_allclose(np.asarray(ref_clocks), np.asarray(new_clocks),
                                rtol=0, atol=1e-6)
 
 
-def test_completions_and_qos_identical(traces):
-    (_, _, _, ref_acc), (_, _, _, new_acc) = traces
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_completions_and_qos_identical(traces, backend):
+    (_, _, _, ref_acc) = traces["ref"]
+    (_, _, _, new_acc) = traces[backend]
     assert set(ref_acc) == set(new_acc)
     for k in ref_acc:
         np.testing.assert_allclose(
@@ -108,8 +121,10 @@ def test_completions_and_qos_identical(traces):
                                   np.asarray(new_acc["viol"]))
 
 
-def test_final_queues_identical(traces):
-    (ref_q, _, _, _), (new_q, _, _, _) = traces
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_final_queues_identical(traces, backend):
+    (ref_q, _, _, _) = traces["ref"]
+    (new_q, _, _, _) = traces[backend]
     unpacked = engine_ref.unpack_queues(new_q)
     np.testing.assert_array_equal(np.asarray(ref_q["run_valid"]),
                                   np.asarray(unpacked["run_valid"]))
@@ -134,5 +149,51 @@ def test_final_queues_identical(traces):
 def test_engines_complete_work(traces):
     """Guard against vacuous equivalence: the stream must actually exercise
     admissions, decodes and completions."""
-    (_, _, _, ref_acc), _ = traces
+    (_, _, _, ref_acc) = traces["ref"]
     assert float(jnp.sum(ref_acc["done"])) > 50.0  # summed over all windows
+
+
+# ---------------------------------------------------------------------------
+# QoS-weighted admission order (admit_order="qos")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ("xla", "pallas"))
+def test_qos_admit_order_pops_highest_pred_s(backend):
+    """With admit_order="qos" a free slot admits the waiter with the highest
+    pred_s, not the oldest; fifo admits the oldest."""
+    pool = profiles.make_pool(1)
+    want = {"fifo": 0.2, "qos": 0.9}
+    for order, expect in want.items():
+        q = engine.empty_queues(1, 1, 2)
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.5,
+                                pred_s=0.2, pred_d=50.0, t=0.0)
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.9,
+                                pred_s=0.9, pred_d=50.0, t=0.001)
+        # t_next below the admit cost -> exactly one admission happens
+        t_next = pool.k1[0] * 10.0 * 0.5
+        q, clocks, _ = jax.jit(lambda q, c, t: engine.advance_all(
+            pool, LAT_L, q, c, t, backend=backend, admit_order=order))(
+                q, jnp.zeros((1,), jnp.float32), t_next)
+        assert bool(engine.run_valid(q)[0, 0])
+        got = float(engine.run_pred_s(q)[0, 0])
+        assert got == pytest.approx(expect), (order, got)
+        assert int(jnp.sum(engine.wait_valid(q))) == 1  # other one still waits
+
+
+def test_qos_admit_order_backends_agree():
+    """The qos admission order has no seed oracle, so pin the three
+    backends to each other bit-for-bit on a short stream."""
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(80, seed=3)
+    ref = _drive_backend(pool, stream, "xla", admit_order="qos")
+    for backend in ("pallas", "shard_map"):
+        got = _drive_backend(pool, stream, backend, admit_order="qos")
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and qos must actually diverge from fifo on this stream
+    fifo = _drive_backend(pool, stream, "xla", admit_order="fifo")
+    diff = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(fifo)))
+    assert diff, "qos admission order never changed an outcome"

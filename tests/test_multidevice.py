@@ -117,3 +117,52 @@ def test_dryrun_tiny_cell_both_meshes():
         assert rec2["ok"], rec2.get("error")
         print("dryrun tiny ok")
     """, devices=512)
+
+
+def test_engine_shard_map_multidevice():
+    """Expert-axis sharded advance_all on a real 8-device ("expert",) mesh
+    is bit-identical to the single-device XLA backend (N=16 experts ->
+    2 rows per device) over 100 Poisson steps with admissions."""
+    run_py("""
+        import functools
+        import jax, jax.numpy as jnp
+        from repro.env import engine, profiles
+        from repro.launch.mesh import make_expert_mesh
+
+        N, R, W, STEPS = 16, 4, 4, 100
+        pool = profiles.make_pool(N)
+        mesh = make_expert_mesh()
+        assert mesh.shape["expert"] == 8, mesh
+
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 4)
+        stream = {
+            "dt": jax.random.exponential(ks[0], (STEPS,)) / 8.0,
+            "expert": jax.random.randint(ks[1], (STEPS,), 0, N),
+            "p": jax.random.randint(ks[2], (STEPS,), 16, 512),
+            "d_true": jax.random.randint(ks[3], (STEPS,), 8, 300),
+        }
+
+        def drive(backend):
+            def step(carry, x):
+                q, clocks, t = carry
+                q, _ = engine.push_wait(q, x["expert"], p=x["p"],
+                                        d_true=x["d_true"], score=0.7,
+                                        pred_s=0.7, pred_d=48.0, t=t)
+                t_next = t + x["dt"]
+                q, clocks, acc = engine.advance_all(
+                    pool, 0.030, q, clocks, t_next, backend=backend,
+                    mesh=mesh if backend == "shard_map" else None)
+                return (q, clocks, t_next), acc["done"]
+            init = (engine.empty_queues(N, R, W),
+                    jnp.zeros((N,), jnp.float32), jnp.float32(0.0))
+            return jax.jit(lambda: jax.lax.scan(step, init, stream))()
+
+        (q_x, c_x, _), d_x = drive("xla")
+        (q_s, c_s, _), d_s = drive("shard_map")
+        for a, b in zip(jax.tree.leaves((q_x, c_x, d_x)),
+                        jax.tree.leaves((q_s, c_s, d_s))):
+            assert (jax.numpy.asarray(a) == jax.numpy.asarray(b)).all()
+        assert float(jnp.sum(d_x)) > 10.0  # non-vacuous
+        print("engine shard_map ok", float(jnp.sum(d_x)))
+    """)

@@ -1,0 +1,62 @@
+"""Workload-process coverage: the realworld (BurstGPT-like) arrival stream
+must keep its long-run mean rate at ~λ despite diurnal + burst modulation,
+and the two-state burst Markov chain must actually flip on and off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.env import workload
+from repro.env.workload import WorkloadConfig
+
+
+def _simulate(cfg: WorkloadConfig, n: int, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+
+    def step(carry, key):
+        state, t = carry
+        dt, state = workload.next_arrival(cfg, state, t, key)
+        return (state, t + dt), (dt, state["burst"])
+
+    (_, t_end), (dts, bursts) = jax.lax.scan(
+        step, (workload.init_state(), jnp.float32(0.0)), keys)
+    return np.asarray(dts), np.asarray(bursts), float(t_end)
+
+
+def test_poisson_mean_rate():
+    lam = 5.0
+    _, _, t_end = _simulate(WorkloadConfig(kind="poisson", rate=lam), 20_000)
+    rate = 20_000 / t_end
+    assert 0.95 * lam < rate < 1.05 * lam, rate
+
+
+def test_realworld_mean_rate_normalized():
+    """Long-run mean arrival rate within ~10% of λ: the burst chain flips
+    per arrival, so the normalization must be time-weighted (burst
+    arrivals occupy 1/mult as much wall-clock)."""
+    lam = 5.0
+    cfg = WorkloadConfig(kind="realworld", rate=lam)
+    for seed in (0, 1):
+        _, _, t_end = _simulate(cfg, 20_000, seed=seed)
+        rate = 20_000 / t_end
+        assert 0.9 * lam < rate < 1.1 * lam, (seed, rate)
+
+
+def test_realworld_burst_state_flips():
+    cfg = WorkloadConfig(kind="realworld", rate=5.0)
+    _, bursts, _ = _simulate(cfg, 10_000)
+    flips_on = int(np.sum(bursts[1:] & ~bursts[:-1]))
+    flips_off = int(np.sum(~bursts[1:] & bursts[:-1]))
+    assert flips_on > 10, flips_on
+    assert flips_off > 10, flips_off
+    frac = float(np.mean(bursts))
+    # stationary arrival fraction on/(on+off) ≈ 0.074
+    assert 0.02 < frac < 0.2, frac
+
+
+def test_realworld_burst_raises_rate():
+    cfg = WorkloadConfig(kind="realworld", rate=5.0)
+    t = jnp.float32(0.0)
+    calm = float(workload.current_rate(cfg, {"burst": jnp.bool_(False)}, t))
+    burst = float(workload.current_rate(cfg, {"burst": jnp.bool_(True)}, t))
+    assert burst == pytest.approx(calm * cfg.burst_rate_mult, rel=1e-5)
