@@ -1,7 +1,15 @@
 """Fig. 11 — QoS / latency across the number of edge experts N (3..12),
-plus the beyond-paper fleet-scale engine sweep: `advance_all` backends
-(xla / pallas / shard_map) at N ∈ {64, 256, 512, 1024}, the edge-cluster
-scales of EdgeShard / Yu et al. (2025).
+plus the beyond-paper fleet-scale sweeps:
+
+  * `advance_all` engine backends (xla / pallas / shard_map) at
+    N ∈ {64, 256, 512, 1024}, the edge-cluster scales of EdgeShard /
+    Yu et al. (2025), and
+  * router TRAINING throughput (`train_sweep`): full jitted
+    collect+insert+SAC-update iterations at N ∈ {64, 256} through the
+    HAN obs path — padded layout at N=64 as the reference, segment
+    (edge-list) layout at both scales.  The N=256 rows exercise the
+    fleet-scale obs path whose linear-in-N memory is asserted by
+    tests/test_han_segments.py.
 
 RL policies are trained at N=6 (paper trains per setting; our default
 harness reuses the N=6 policy only where shapes match, so RL rows appear
@@ -10,9 +18,61 @@ paper protocol)."""
 from __future__ import annotations
 
 import sys
+import time
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks import common
 from repro.env import env as env_lib
+
+TRAIN_N = (64, 256)
+
+
+def train_sweep(n_list=TRAIN_N, iters: int = 3) -> None:
+    """Training steps/sec at fleet-scale N: one row per (N, obs layout),
+    timing `iters` post-warmup jitted iterations (collect 2x2 transitions,
+    2 SAC updates on batch 16)."""
+    from repro.core import features, sac as sac_lib, training
+
+    for n in n_list:
+        env_cfg = env_lib.EnvConfig(n_experts=n)
+        pool = env_lib.make_env_pool(env_cfg)
+        fmts = ("padded", "segments") if n == min(n_list) else ("segments",)
+        for fmt in fmts:
+            sac_cfg = sac_lib.SACConfig(
+                n_actions=n + 1, flat_dim=n * 3,
+                n_run_edges=(features.seg_run_rows(env_cfg)
+                             if fmt == "segments" else None))
+            tc = training.TrainConfig(
+                n_envs=2, collect_steps=2, updates_per_iter=2,
+                batch_size=16, buffer_capacity=1024,
+                warmup_transitions=1, iterations=iters, obs_fmt=fmt)
+            params, opt, opt_state, env_states, buf = \
+                training.init_train_state(env_cfg, sac_cfg, tc, pool,
+                                          jax.random.PRNGKey(0))
+            it = training.make_iteration(env_cfg, sac_cfg, tc, pool, opt)
+            key = jax.random.PRNGKey(1)
+
+            def one(params, opt_state, env_states, buf, key, i):
+                step = jnp.asarray(i * tc.updates_per_iter, jnp.int32)
+                return it(params, opt_state, env_states, buf, key, step)
+
+            # warm-up = compile + first insert (donated args get rebound)
+            state = one(params, opt_state, env_states, buf, key, 0)
+            jax.block_until_ready(state[:5])
+            t0 = time.perf_counter()
+            for i in range(1, iters + 1):
+                state = one(*state[:5], i)
+            jax.block_until_ready(state[:5])
+            secs = time.perf_counter() - t0
+            per_iter = secs / iters
+            trans = tc.n_envs * tc.collect_steps / per_iter
+            common.emit(
+                f"router_train/N{n}/{fmt}", per_iter * 1e6,
+                f"iters_per_s={1.0 / per_iter:.2f};"
+                f"transitions_per_s={trans:.1f};"
+                f"updates_per_s={tc.updates_per_iter / per_iter:.2f}")
 
 
 def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
@@ -31,7 +91,11 @@ def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
     from benchmarks import bench_engine
     bench_engine.backend_sweep(n_steps=100,
                                prefix="engine_scaling/advance_all")
+    train_sweep()
 
 
 if __name__ == "__main__":
-    run(train_per_n="--train-per-n" in sys.argv)
+    if "--train-only" in sys.argv:
+        train_sweep()
+    else:
+        run(train_per_n="--train-per-n" in sys.argv)

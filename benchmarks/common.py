@@ -67,35 +67,59 @@ def write_json(suite: str, out_dir: str = ".", rows=None) -> str:
 
 
 def check_against_baseline(suite: str, rows, *, tol: float = 1.3,
-                           baseline_dir: str = ".") -> List[str]:
+                           baseline_dir: str = ".",
+                           require: bool = False) -> List[str]:
     """Perf-regression check: compare fresh ``us_per_call`` rows against the
     committed ``BENCH_<suite>.json`` baseline; a row regresses when it is
     more than ``tol`` x slower.  Derived-only rows (us_per_call == 0) and
     rows absent from the baseline (new benchmarks) are skipped.  Returns
-    human-readable failure strings (empty = pass)."""
+    human-readable failure strings (empty = pass).
+
+    ``require=True`` (the CI lanes) turns every vacuous-pass path —
+    missing baseline file, baseline recorded on a different backend, or
+    zero fresh rows matching baseline rows (renamed emit labels) — into a
+    readable failure instead of a silent skip, so the perf gate cannot be
+    quietly disabled."""
+    regen = (f"Regenerate it on an idle box with `PYTHONPATH=src "
+             f"python -m benchmarks.run --quick --only {suite} --json` "
+             f"and commit the file (see benchmarks/run.py, "
+             f"'CI & benchmarks').")
     path = os.path.join(baseline_dir, f"BENCH_{suite}.json")
     if not os.path.exists(path):
+        if require:
+            return [f"{suite}: baseline {path} is missing — the perf gate "
+                    f"cannot run. {regen}"]
         print(f"# [check] no baseline {path}; skipping", file=sys.stderr)
         return []
     with open(path) as f:
         payload = json.load(f)
     if payload.get("backend") != jax.default_backend():
-        print(f"# [check] {path} was recorded on backend="
-              f"{payload.get('backend')!r} but this run uses "
-              f"{jax.default_backend()!r}; cross-platform timings are not "
-              f"comparable — skipping", file=sys.stderr)
+        msg = (f"{path} was recorded on backend="
+               f"{payload.get('backend')!r} but this run uses "
+               f"{jax.default_backend()!r}; cross-platform timings are "
+               f"not comparable")
+        if require:
+            return [f"{suite}: {msg} — the perf gate cannot run. {regen}"]
+        print(f"# [check] {msg} — skipping", file=sys.stderr)
         return []
     base = {r["name"]: r["us_per_call"] for r in payload["results"]}
     failures = []
+    compared = 0
     for row in rows:
         ref = base.get(row["name"], 0.0)
         if ref <= 0.0 or row["us_per_call"] <= 0.0:
             continue
+        compared += 1
         ratio = row["us_per_call"] / ref
         if ratio > tol:
             failures.append(
                 f"{suite}/{row['name']}: {row['us_per_call']:.1f}us vs "
                 f"baseline {ref:.1f}us ({ratio:.2f}x > {tol:g}x)")
+    if require and compared == 0:
+        failures.append(
+            f"{suite}: no fresh row matched any baseline row in {path} "
+            f"(emit labels renamed?) — 0 comparisons made, the perf gate "
+            f"cannot pass vacuously. {regen}")
     return failures
 
 
@@ -123,6 +147,13 @@ def load_router(variant: str, env_cfg, *, quick_iters: int = 80,
 
 def policy_zoo(env_cfg, pool, *, include_rl: bool = True,
                rl_variants=("qos", "baseline")) -> List:
+    """All benchmark policies.  ``REPRO_BENCH_RL=0`` drops the RL rows —
+    the tier-1 CI lane sets it so the routing perf gate never pays for
+    quick-training routers on a shared runner (the committed CI-sized
+    BENCH_routing.json accordingly holds heuristic rows only; the nightly
+    full bench runs with RL included)."""
+    if os.environ.get("REPRO_BENCH_RL", "1") == "0":
+        include_rl = False
     pols = [
         routers.bert_router(),
         routers.round_robin(env_cfg.n_experts),

@@ -7,6 +7,21 @@ per-expert predictions (s_hat_{j,n}, d_hat_{j,n}) and the profiled latency
 gradients (k1, k2) — the per-expert predictions ride on the expert node
 because the arrived-request node connects to *all* experts (§V-B2); this is
 our static-shape encoding of the arrived->expert edge features.
+
+Two layouts (``fmt=``):
+
+  * ``"padded"``   — per-expert request tensors ``run (N, R, 6)`` /
+    ``wait (N, W, 6)`` with validity masks (the PR 1 encoding);
+  * ``"segments"`` — the flat edge-list encoding for fleet-scale N: one
+    request-node tensor ``req (N*(R+W), 6)`` with a ``seg`` expert-id
+    vector, consumed by ``han.forward_segments`` via segment-softmax
+    attention.  Request->expert edges are materialized once instead of
+    once per (expert, meta-path) pad block, every HAN intermediate stays
+    O(N*(R+W)*D) — never O(N^2) — and the layout is ready for ragged
+    per-expert capacities.  Run edges occupy rows [0, N*R), wait edges
+    [N*R, N*(R+W)), both ordered expert-major, so the content is a pure
+    reshape of the padded layout (equivalence asserted in
+    tests/test_han_segments.py).
 """
 from __future__ import annotations
 
@@ -18,9 +33,14 @@ from repro.env import engine_layout as layout
 REQ_FEATS = 6
 EXP_FEATS = 7
 
+# request-node feature channels (same order in both layouts)
+REQ_P, REQ_PRED_S, REQ_PRED_D, REQ_MEM, REQ_D_CUR, REQ_LAT = range(6)
 
-def build_obs(cfg, pool, state: dict) -> dict:
-    """Returns the padded heterogeneous-graph observation."""
+
+def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
+    """Returns the heterogeneous-graph observation in the given layout."""
+    if fmt not in ("padded", "segments"):
+        raise ValueError(f"unknown obs fmt {fmt!r}")
     q = state["queues"]
     t = state["clock"]
     L = cfg.latency_L
@@ -83,14 +103,39 @@ def build_obs(cfg, pool, state: dict) -> dict:
         jnp.zeros(()),
     ])
 
-    return {
+    obs = {
         "expert": exp_f, "run": run_f, "wait": wait_f,
         "run_mask": run_valid, "wait_mask": wait_valid,
         "arrived": arr_f,
     }
+    return obs if fmt == "padded" else to_segments(obs)
+
+
+def to_segments(obs: dict) -> dict:
+    """Flatten a padded observation into the segment (edge-list) layout:
+    run edges in rows [0, N*R), wait edges in [N*R, N*(R+W)), both
+    expert-major.  The expert-id segment vector is NOT stored — it is a
+    static function of (N, R, W) that ``han.forward_segments`` rebuilds
+    (``han.segment_ids``), which keeps replay-buffer transitions free of
+    constant tensors."""
+    n, r = obs["run"].shape[:2]
+    w = obs["wait"].shape[1]
+    req = jnp.concatenate([obs["run"].reshape(n * r, -1),
+                           obs["wait"].reshape(n * w, -1)])
+    mask = jnp.concatenate([obs["run_mask"].reshape(-1),
+                            obs["wait_mask"].reshape(-1)])
+    return {"expert": obs["expert"], "req": req,
+            "req_mask": mask, "arrived": obs["arrived"]}
+
+
+def seg_run_rows(cfg) -> int:
+    """Static count of run-edge rows at the head of ``obs["req"]`` for an
+    env config (``sac.SACConfig.n_run_edges`` is set from this)."""
+    return cfg.n_experts * cfg.run_cap
 
 
 def flat_expert_obs(obs: dict) -> jax.Array:
     """Baseline-RL state: raw expert-level features only (paper §VI-A),
-    i.e. (e_n, |run|, |wait|) per expert — no request-level detail."""
+    i.e. (e_n, |run|, |wait|) per expert — no request-level detail.
+    Layout-agnostic: both obs formats carry the ``expert`` tensor."""
     return obs["expert"][:, :3].reshape(-1)

@@ -12,6 +12,20 @@ which is the TPU-idiomatic encoding of the paper's dynamic graph: the
 padding the paper worries about (§V-B) is neutralized by masks instead of
 by dynamic graph libraries.  Paper config: 2 layers, 4 heads, hidden 64.
 The arrived-request embedding is the DRL agent's input.
+
+Two forward paths over the SAME parameters:
+
+  * ``forward``          — padded layout (``run (N, R, F)`` / ``wait``),
+  * ``forward_segments`` — flat edge-list layout from
+    ``features.to_segments``; node-level attention becomes a segment
+    softmax (``_gat_segment``) grouped by each request node's expert id.
+
+Both are numerically equivalent (tests/test_han_segments.py) and neither
+materializes any O(N^2) tensor: the only N-wide attention is the arrived
+node's single-query pass over the N experts, and every request-side
+intermediate is O(N*(R+W)*hidden) — the property that lets the obs path
+scale to fleet-size N (>= 256) and that the same test asserts by scanning
+jaxpr intermediates across N.
 """
 from __future__ import annotations
 
@@ -105,6 +119,38 @@ def _gat_aggregate(p: dict, cfg: HANConfig, target: jax.Array,
     return jax.nn.elu(out.reshape(*target.shape[:-1], cfg.hidden))
 
 
+def _gat_segment(p: dict, cfg: HANConfig, target: jax.Array,
+                 neigh: jax.Array, seg: jax.Array, mask: jax.Array,
+                 n_seg: int) -> jax.Array:
+    """Segment-softmax analogue of ``_gat_aggregate``: target (N, D);
+    neigh (E, D) edge list grouped by ``seg`` (E,) target ids; -> (N, D).
+    Matches the padded path numerically: the per-segment max/denominator
+    see the same -1e9 masked scores the padded softmax sees."""
+    h, dh = cfg.heads, cfg.hidden // cfg.heads
+    tgt_h = (target @ p["w"]).reshape(-1, h, dh)                  # (N, h, dh)
+    nb_h = (neigh @ p["w"]).reshape(-1, h, dh)                    # (E, h, dh)
+    s_dst = jnp.einsum("nhd,hd->nh", tgt_h, p["a_dst"])           # (N, h)
+    s_src = jnp.einsum("ehd,hd->eh", nb_h, p["a_src"])            # (E, h)
+    e = jax.nn.leaky_relu(s_src + s_dst[seg], cfg.leaky_slope)
+    e = jnp.where(mask[:, None], e, -1e9)
+    m = jax.ops.segment_max(e, seg, num_segments=n_seg)           # (N, h)
+    ex = jnp.exp(e - m[seg])
+    denom = jax.ops.segment_sum(ex, seg, num_segments=n_seg)      # (N, h)
+    alpha = jnp.where(mask[:, None], ex / denom[seg], 0.0)        # (E, h)
+    out = jax.ops.segment_sum(alpha[..., None] * nb_h, seg,
+                              num_segments=n_seg)                 # (N, h, dh)
+    return jax.nn.elu(out.reshape(-1, cfg.hidden))
+
+
+def segment_ids(n_experts: int, n_run: int, n_req: int) -> jax.Array:
+    """Expert id per request-node row of the segment layout (static: run
+    rows [0, n_run) then wait rows, both expert-major)."""
+    r = n_run // n_experts
+    w = (n_req - n_run) // n_experts
+    ar = jnp.arange(n_experts, dtype=jnp.int32)
+    return jnp.concatenate([jnp.repeat(ar, r), jnp.repeat(ar, w)])
+
+
 def _semantic(p: dict, embeds: jax.Array) -> jax.Array:
     """embeds: (..., P, D) meta-path embeddings -> (..., D)."""
     w = jnp.einsum("...pd,d->...p", jnp.tanh(embeds @ p["w"] + p["b"]), p["q"])
@@ -140,6 +186,41 @@ def forward(params: dict, obs: dict, cfg: HANConfig = HANConfig()) -> Tuple[jax.
         wait_new = jax.nn.elu(wait_h @ lp["r_self"] +
                               (exp_h @ lp["r_exp"])[:, None, :])
         exp_h, arr_h, run_h, wait_h = exp_new, arr_new, run_new, wait_new
+
+    return arr_h, exp_h
+
+
+def forward_segments(params: dict, obs: dict, cfg: HANConfig = HANConfig(),
+                     *, n_run: int) -> Tuple[jax.Array, jax.Array]:
+    """``forward`` over the segment (edge-list) obs layout
+    (``features.to_segments``): obs carries ``req (E, F)`` / ``req_mask
+    (E,)`` with run edges in rows [0, n_run).  Same parameters, same
+    output; every intermediate is O(E * hidden) = O(N * (R + W) * hidden).
+    """
+    exp_h = jnp.tanh(obs["expert"] @ params["proj_expert"])      # (N, D)
+    req_h = jnp.tanh(obs["req"] @ params["proj_req"])            # (E, D)
+    arr_h = jnp.tanh(obs["arrived"] @ params["proj_arrived"])    # (D,)
+    mask = obs["req_mask"]
+    N = exp_h.shape[0]
+    E = req_h.shape[0]
+    seg = segment_ids(N, n_run, E)
+    run, wait = slice(0, n_run), slice(n_run, None)
+
+    for lp in params["layers"]:
+        e_run = _gat_segment(lp["e_run"], cfg, exp_h, req_h[run],
+                             seg[run], mask[run], N)
+        e_wait = _gat_segment(lp["e_wait"], cfg, exp_h, req_h[wait],
+                              seg[wait], mask[wait], N)
+        e_self = jax.nn.elu(exp_h @ lp["e_self"])
+        exp_new = _semantic(lp["e_sem"],
+                            jnp.stack([e_self, e_run, e_wait], axis=-2))
+        a_exp = _gat_aggregate(lp["a_exp"], cfg, arr_h, exp_h,
+                               jnp.ones((N,), bool))
+        a_self = jax.nn.elu(arr_h @ lp["a_self"])
+        arr_new = _semantic(lp["a_sem"], jnp.stack([a_self, a_exp], axis=-2))
+        # request nodes pull from their expert (gather by segment id)
+        req_new = jax.nn.elu(req_h @ lp["r_self"] + (exp_h @ lp["r_exp"])[seg])
+        exp_h, arr_h, req_h = exp_new, arr_new, req_new
 
     return arr_h, exp_h
 

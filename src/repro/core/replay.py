@@ -5,7 +5,31 @@ at the default 100k capacity) lives on device and is DONATED to the jitted
 training iteration via ``donate_argnums`` in
 ``repro.core.training.make_iteration``, so inserts update it in place with
 no per-iteration copy and no host round-trips.  The donation contract is
-asserted by ``tests/test_training_substrate.py::test_iteration_donates_replay_buffer``."""
+asserted by ``tests/test_training_substrate.py::test_iteration_donates_replay_buffer``.
+
+Capacity sharding
+-----------------
+Under a mesh with an ``expert`` axis (``launch.mesh.make_expert_mesh``)
+the buffer's capacity axis is split across devices: shard ``i`` of ``S``
+owns global rows ``[i*cap/S, (i+1)*cap/S)`` and the ring scalars
+(``ptr``/``size``) are replicated (``distributed.sharding.replay_specs``).
+``shard_add_batch`` / ``shard_sample_local`` are the per-shard bodies used
+inside ``training.make_iteration``'s ``shard_map``:
+
+  * insert — each shard scatters only the transitions whose global ring
+    index lands in its row range (``mode="drop"`` for the rest), so the
+    union across shards is bit-identical to ``add_batch`` on the unsharded
+    buffer;
+  * sample — each shard gathers its owned rows and contributes exact zeros
+    elsewhere; summing the contributions (``lax.psum`` over the expert
+    axis) reproduces ``sample`` bit-for-bit because every global row is
+    owned by exactly one shard.
+
+Both are pure functions of the local shard plus ``(shard_idx, n_shards)``,
+so ``tests/test_replay_sharded.py`` checks the bit-identity claim without
+needing multiple devices, and ``tests/test_multidevice.py`` re-asserts it
+on a real 8-device mesh.
+"""
 from __future__ import annotations
 
 from typing import Dict, Tuple
@@ -56,4 +80,75 @@ def sample(buf: dict, key, batch_size: int) -> Dict:
         "action": buf["action"][idx],
         "reward": buf["reward"][idx],
         "discount": buf["discount"][idx],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Capacity-sharded bodies (see module docstring).
+# ---------------------------------------------------------------------------
+
+
+def _owned_rows(buf: dict, idx: jax.Array, shard_idx,
+                n_shards: int) -> Tuple[jax.Array, jax.Array, int]:
+    """Map global ring indices to this shard's local rows.
+
+    Returns (hit, local, cap_local): ``hit[k]`` marks indices this shard
+    owns, ``local[k]`` is the in-shard row (meaningless where ~hit)."""
+    cap_local = buf["action"].shape[0]
+    lo = shard_idx * cap_local
+    local = idx - lo
+    hit = (local >= 0) & (local < cap_local)
+    return hit, local, cap_local
+
+
+def shard_add_batch(buf: dict, obs, action, reward, discount, next_obs, *,
+                    shard_idx, n_shards: int) -> dict:
+    """Per-shard ring-buffer insert: scatter the transitions whose global
+    index lands in this shard's rows, drop the rest.  The global capacity
+    is ``n_shards * local rows`` — never read from ``buf["capacity"]``,
+    which stays the replicated global value."""
+    n = action.shape[0]
+    cap_local = buf["action"].shape[0]
+    cap = cap_local * n_shards
+    idx = (buf["ptr"] + jnp.arange(n)) % cap
+    hit, local, _ = _owned_rows(buf, idx, shard_idx, n_shards)
+    # out-of-shard rows are pointed past the local end and dropped
+    tgt = jnp.where(hit, local, cap_local)
+    set_at = lambda dst, src: dst.at[tgt].set(src, mode="drop")
+    return {
+        "obs": jax.tree.map(set_at, buf["obs"], obs),
+        "next_obs": jax.tree.map(set_at, buf["next_obs"], next_obs),
+        "action": set_at(buf["action"], action.astype(jnp.int32)),
+        "reward": set_at(buf["reward"], reward.astype(jnp.float32)),
+        "discount": set_at(buf["discount"], discount.astype(jnp.float32)),
+        "ptr": (buf["ptr"] + n) % cap,
+        "size": jnp.minimum(buf["size"] + n, cap),
+        "capacity": buf["capacity"],
+    }
+
+
+def shard_sample_local(buf: dict, key, batch_size: int, *,
+                       shard_idx, n_shards: int) -> Dict:
+    """This shard's additive contribution to a global ``sample``: owned
+    rows are gathered, all other rows contribute exact zeros.  Summing the
+    contributions across shards (``lax.psum`` inside ``shard_map``, plain
+    ``sum`` in tests) is bit-identical to ``sample`` on the unsharded
+    buffer — ``key`` and ``size`` are replicated so every shard draws the
+    same global indices."""
+    idx = jax.random.randint(key, (batch_size,), 0,
+                             jnp.maximum(buf["size"], 1))
+    hit, local, _ = _owned_rows(buf, idx, shard_idx, n_shards)
+    safe = jnp.where(hit, local, 0)
+
+    def take(x):
+        v = x[safe]
+        m = hit.reshape(hit.shape + (1,) * (v.ndim - 1))
+        return jnp.where(m, v, jnp.zeros((), v.dtype))
+
+    return {
+        "obs": jax.tree.map(take, buf["obs"]),
+        "next_obs": jax.tree.map(take, buf["next_obs"]),
+        "action": take(buf["action"]),
+        "reward": take(buf["reward"]),
+        "discount": take(buf["discount"]),
     }

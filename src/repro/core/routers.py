@@ -29,6 +29,10 @@ class Policy:
     name: str
     init_state: Callable   # (key) -> policy state pytree
     act: Callable          # (pstate, env_state, obs, key) -> (action, pstate)
+    # observation layout this policy consumes ("padded" | "segments");
+    # training.evaluate builds obs accordingly so routers trained on the
+    # segment layout (fleet-scale N) evaluate on the same layout
+    obs_fmt: str = "padded"
 
 
 def round_robin(n_experts: int) -> Policy:
@@ -87,7 +91,7 @@ def quality_least_loaded(slack: int = 2) -> Policy:
 
 
 def sac_policy(name: str, cfg: sac_lib.SACConfig, params,
-               *, greedy: bool = True) -> Policy:
+               *, greedy: bool = True, obs_fmt: str = "padded") -> Policy:
     def init_state(key):
         return {}
 
@@ -95,4 +99,4 @@ def sac_policy(name: str, cfg: sac_lib.SACConfig, params,
         a = sac_lib.act(params, cfg, obs, key, greedy=greedy)
         return a.astype(jnp.int32), pstate
 
-    return Policy(name, init_state, act)
+    return Policy(name, init_state, act, obs_fmt=obs_fmt)

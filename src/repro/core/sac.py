@@ -8,7 +8,7 @@ is auto-tuned toward a target entropy of `entropy_target_frac * log(A)`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,10 @@ class SACConfig:
     use_han: bool = True          # False -> Baseline RL (flat expert feats)
     flat_dim: int = 18            # N * 3 expert-level features
     han: han_lib.HANConfig = han_lib.HANConfig()
+    # run-edge rows at the head of segment-layout obs["req"]
+    # (features.seg_run_rows(env_cfg)); only needed when training on
+    # obs_fmt="segments"
+    n_run_edges: Optional[int] = None
 
 
 def _mlp_init(key, dims):
@@ -70,16 +74,24 @@ def init_params(key, cfg: SACConfig) -> dict:
 
 
 def embed(params: dict, cfg: SACConfig, obs: dict, *, which: str = "actor") -> jax.Array:
-    """obs -> state embedding. Batched obs get vmapped automatically."""
+    """obs -> state embedding. Batched obs get vmapped automatically.
+    Dispatches on the obs layout: padded (``run``/``wait``) vs segments
+    (``req``; see features.to_segments), same HAN parameters either way."""
     if not cfg.use_han:
         flat = obs["expert"][..., :3].reshape(*obs["expert"].shape[:-2], -1)
         return flat
     han_params = params["han"] if which in ("actor",) else params[which]
     batched = obs["arrived"].ndim == 2
 
-    def one(o):
-        arr, _ = han_lib.forward(han_params, o, cfg.han)
-        return arr
+    if "req" in obs:
+        if cfg.n_run_edges is None:
+            raise ValueError(
+                "segment-layout obs need SACConfig.n_run_edges "
+                "(= features.seg_run_rows(env_cfg))")
+        one = lambda o: han_lib.forward_segments(
+            han_params, o, cfg.han, n_run=cfg.n_run_edges)[0]
+    else:
+        one = lambda o: han_lib.forward(han_params, o, cfg.han)[0]
 
     return jax.vmap(one)(obs) if batched else one(obs)
 

@@ -4,10 +4,25 @@ jitted collect+update iterations — the whole loop lives inside XLA.
 Baseline RL (paper §VI-A) trains through the same loop with
 ``use_han=False`` and ``qos_reward=False`` (plain completion reward, raw
 expert-level features).
+
+Mesh-sharded training (``make_iteration(..., mesh=...)``)
+---------------------------------------------------------
+On a mesh with an ``expert`` axis the whole iteration (collect -> buffer
+insert -> SAC update) runs under one ``shard_map``: the replay buffer's
+capacity axis is split across devices (``distributed.sharding.
+replay_specs``; inserts stay donated/zero-copy per shard) while params /
+opt_state / env_states / rng are replicated, so collect and the SAC update
+execute identically on every device and only the sampled batch crosses
+devices (one ``psum`` of per-shard gather contributions).  The sharded
+iteration is bit-identical to the single-device path — asserted by
+``tests/test_replay_sharded.py`` (shard logic) and
+``tests/test_multidevice.py::test_sharded_training_iteration_multidevice``
+(real 8-device mesh).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Optional, Tuple
 
@@ -34,6 +49,10 @@ class TrainConfig:
     zero_len_pred: bool = False
     seed: int = 0
     log_every: int = 25
+    # observation encoding fed to the HAN: "padded" (N, R/W, F) per-expert
+    # request tensors, or "segments" — the flat edge-list layout that holds
+    # the HAN obs path linear in N at fleet scale (repro.core.features).
+    obs_fmt: str = "padded"
 
 
 def _maybe_zero_preds(tc: TrainConfig, obs: dict) -> dict:
@@ -41,19 +60,21 @@ def _maybe_zero_preds(tc: TrainConfig, obs: dict) -> dict:
         return obs
     obs = dict(obs)
     exp = obs["expert"]
-    run, wait = obs["run"], obs["wait"]
     arr = obs["arrived"]
+    # request-node channels 1/2 are (pred_s, pred_d) in BOTH layouts
+    # (features.REQ_PRED_S / REQ_PRED_D); segments carry one flat tensor.
+    req_keys = ("req",) if "req" in obs else ("run", "wait")
     if tc.zero_score_pred:
         exp = exp.at[..., 3].set(0.0)
-        run = run.at[..., 1].set(0.0)
-        wait = wait.at[..., 1].set(0.0)
         arr = arr.at[..., 1].set(0.0)
+        for k in req_keys:
+            obs[k] = obs[k].at[..., features.REQ_PRED_S].set(0.0)
     if tc.zero_len_pred:
         exp = exp.at[..., 4].set(0.0)
-        run = run.at[..., 2].set(0.0)
-        wait = wait.at[..., 2].set(0.0)
         arr = arr.at[..., 2].set(0.0)
-    obs.update(expert=exp, run=run, wait=wait, arrived=arr)
+        for k in req_keys:
+            obs[k] = obs[k].at[..., features.REQ_PRED_D].set(0.0)
+    obs.update(expert=exp, arrived=arr)
     return obs
 
 
@@ -67,8 +88,10 @@ def make_reward_fn(env_cfg: env_lib.EnvConfig, pool, tc: TrainConfig):
 
 
 def init_train_state(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
-                     tc: TrainConfig, pool, key):
-    """Build (params, opt, opt_state, env_states, buf) for the jitted loop."""
+                     tc: TrainConfig, pool, key, *, mesh=None):
+    """Build (params, opt, opt_state, env_states, buf) for the jitted loop.
+    With ``mesh``, the replay buffer is placed capacity-sharded over the
+    ``expert`` axis and everything else replicated."""
     k_init, k_env = jax.random.split(key)
     params = sac_lib.init_params(k_init, sac_cfg)
     opt = opt_lib.make_optimizer(
@@ -79,27 +102,44 @@ def init_train_state(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
     env_keys = jax.random.split(k_env, tc.n_envs)
     env_states = jax.vmap(lambda k: env_lib.reset(env_cfg, pool, k))(env_keys)
     obs0 = features.build_obs(env_cfg, pool, env_lib.reset(
-        env_cfg, pool, jax.random.PRNGKey(0)))
+        env_cfg, pool, jax.random.PRNGKey(0)), fmt=tc.obs_fmt)
     buf = replay.init(tc.buffer_capacity, obs0)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.distributed import sharding
+        buf = sharding.shard_replay_buffer(buf, mesh)
+        rep = NamedSharding(mesh, PartitionSpec())
+        put_rep = lambda t: jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), rep), t)
+        params, opt_state, env_states = (put_rep(params), put_rep(opt_state),
+                                         put_rep(env_states))
     return params, opt, opt_state, env_states, buf
 
 
 def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
-                   tc: TrainConfig, pool, opt):
+                   tc: TrainConfig, pool, opt, *, mesh=None):
     """One jitted collect+update iteration.
 
     ``params / opt_state / env_states / buf`` are DONATED: the ~capacity-
     sized replay buffer (hundreds of MB of obs/next_obs) is updated in
     place instead of being copied every iteration.  Callers must rebind
     their references to the returned values (``train_router`` does).
+
+    ``mesh=None`` runs single-device (the reference path); with a mesh the
+    same body runs under ``shard_map`` with the buffer capacity-sharded
+    over the ``expert`` axis (see module docstring) and only the replay
+    insert/sample bodies differ.
     """
     reward_fn = make_reward_fn(env_cfg, pool, tc)
 
     def obs_of(env_states):
-        o = jax.vmap(lambda s: features.build_obs(env_cfg, pool, s))(env_states)
+        o = jax.vmap(lambda s: features.build_obs(
+            env_cfg, pool, s, fmt=tc.obs_fmt))(env_states)
         return _maybe_zero_preds(tc, o)
 
-    def iteration(params, opt_state, env_states, buf, key, step):
+    def iteration_body(params, opt_state, env_states, buf, key, step, *,
+                       insert_fn, sample_fn):
         def collect(carry, _):
             # obs rides in the carry so build_obs runs ONCE per env step
             # (the seed recomputed next_obs as obs on the following step).
@@ -115,8 +155,8 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
             rew = jax.vmap(lambda s, a, i: reward_fn(s, a, i))(
                 env_states, actions, infos)
             next_obs = obs_of(env_states2)
-            buf = replay.add_batch(buf, obs, actions, rew,
-                                   jnp.ones_like(rew), next_obs)
+            buf = insert_fn(buf, obs, actions, rew,
+                            jnp.ones_like(rew), next_obs)
             return (env_states2, next_obs, buf, key), jnp.mean(rew)
 
         (env_states, _, buf, key), rews = jax.lax.scan(
@@ -126,7 +166,7 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         def update(carry, _):
             params, opt_state, key = carry
             key, k_s = jax.random.split(key)
-            batch = replay.sample(buf, k_s, tc.batch_size)
+            batch = sample_fn(buf, k_s, tc.batch_size)
 
             def loss_fn(tr):
                 p = sac_lib.merge_trainable(params, tr)
@@ -160,19 +200,61 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         aux["collect_reward"] = jnp.mean(rews)
         return params, opt_state, env_states, buf, key, aux
 
-    return jax.jit(iteration, donate_argnums=(0, 1, 2, 3))
+    if mesh is None:
+        def iteration(params, opt_state, env_states, buf, key, step):
+            return iteration_body(params, opt_state, env_states, buf, key,
+                                  step, insert_fn=replay.add_batch,
+                                  sample_fn=replay.sample)
+        return jax.jit(iteration, donate_argnums=(0, 1, 2, 3))
+
+    # --- sharded path: the whole iteration under one shard_map ---
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.distributed import sharding
+
+    if env_cfg.engine_backend == "shard_map":
+        raise ValueError(
+            "engine_backend='shard_map' cannot nest inside the sharded "
+            "training iteration; use 'xla' or 'pallas' for the env engine")
+    ax = sharding.EXPERT
+    if ax not in mesh.shape:
+        raise ValueError(f"training mesh has no '{ax}' axis: {mesh}")
+    n_shards = sharding.replay_shards(mesh, tc.buffer_capacity)
+    buf_specs = sharding.replay_specs()
+
+    def body(params, opt_state, env_states, buf, key, step):
+        shard_idx = jax.lax.axis_index(ax)
+        insert_fn = functools.partial(replay.shard_add_batch,
+                                      shard_idx=shard_idx, n_shards=n_shards)
+
+        def sample_fn(b, k, batch_size):
+            contrib = replay.shard_sample_local(
+                b, k, batch_size, shard_idx=shard_idx, n_shards=n_shards)
+            return jax.lax.psum(contrib, ax)
+
+        return iteration_body(params, opt_state, env_states, buf, key, step,
+                              insert_fn=insert_fn, sample_fn=sample_fn)
+
+    rep = P()
+    sharded = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, buf_specs, rep, rep),
+        out_specs=(rep, rep, rep, buf_specs, rep, rep),
+        check_vma=False)
+    return jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
 
 
 def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
-                 tc: TrainConfig, *, pool=None,
+                 tc: TrainConfig, *, pool=None, mesh=None,
                  log_fn: Optional[Callable] = None) -> Tuple[dict, list]:
     """Returns (trained params, history of metric dicts)."""
     pool = pool if pool is not None else env_lib.make_env_pool(env_cfg)
     key = jax.random.PRNGKey(tc.seed)
     k_state, key = jax.random.split(key)
     params, opt, opt_state, env_states, buf = init_train_state(
-        env_cfg, sac_cfg, tc, pool, k_state)
-    iteration = make_iteration(env_cfg, sac_cfg, tc, pool, opt)
+        env_cfg, sac_cfg, tc, pool, k_state, mesh=mesh)
+    iteration = make_iteration(env_cfg, sac_cfg, tc, pool, opt, mesh=mesh)
 
     history = []
     t0 = time.time()
@@ -193,9 +275,13 @@ def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
 
 def evaluate(env_cfg: env_lib.EnvConfig, pool, policy, n_steps: int = 5000,
              seed: int = 1234, n_envs: int = 4) -> dict:
-    """Run a policy greedily; returns paper metrics (avg QoS, latency/token)."""
+    """Run a policy greedily; returns paper metrics (avg QoS, latency/token).
+    Observations are built in the policy's declared format
+    (``routers.Policy.obs_fmt``) so routers trained on segment obs evaluate
+    on segment obs."""
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, n_envs)
+    obs_fmt = getattr(policy, "obs_fmt", "padded")
 
     def run_one(k):
         state = env_lib.reset(env_cfg, pool, k)
@@ -204,7 +290,7 @@ def evaluate(env_cfg: env_lib.EnvConfig, pool, policy, n_steps: int = 5000,
         def body(carry, i):
             state, pstate, k = carry
             k, k_act = jax.random.split(k)
-            obs = features.build_obs(env_cfg, pool, state)
+            obs = features.build_obs(env_cfg, pool, state, fmt=obs_fmt)
             a, pstate = policy.act(pstate, state, obs, k_act)
             state, r, info = env_lib.step(env_cfg, pool, state, a)
             return (state, pstate, k), r

@@ -17,6 +17,7 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
@@ -142,6 +143,50 @@ def expert_spec(mesh: Mesh, n_experts: int, ndim: int = 1) -> PartitionSpec:
             and n_experts % mesh.shape[EXPERT] == 0:
         spec[0] = EXPERT
     return PartitionSpec(*spec)
+
+
+def replay_shards(mesh: Optional[Mesh], capacity: int) -> int:
+    """Number of capacity-axis shards the replay buffer splits into on this
+    mesh: the size of the ``expert`` axis (the training substrate reuses the
+    scheduling engine's expert mesh — see ROADMAP's replay-sharding item).
+    Raises when the capacity does not divide evenly; silent padding would
+    break the ring-pointer arithmetic's bit-identity with the single-device
+    buffer."""
+    if mesh is None or EXPERT not in mesh.shape:
+        return 1
+    n = int(mesh.shape[EXPERT])
+    if capacity % n != 0:
+        raise ValueError(
+            f"buffer_capacity={capacity} not divisible by mesh axis "
+            f"'{EXPERT}'={n}")
+    return n
+
+
+def replay_specs() -> dict:
+    """shard_map / NamedSharding spec tree for a replay buffer pytree
+    (``repro.core.replay``): the capacity axis (dim 0 of every transition
+    tensor, including all obs/next_obs leaves via the tree-prefix rule) is
+    split over the ``expert`` mesh axis; the ring scalars (ptr/size/
+    capacity) stay replicated so every shard agrees on the global cursor."""
+    data = PartitionSpec(EXPERT)
+    return {
+        "obs": data, "next_obs": data,
+        "action": data, "reward": data, "discount": data,
+        "ptr": PartitionSpec(), "size": PartitionSpec(),
+        "capacity": PartitionSpec(),
+    }
+
+
+def shard_replay_buffer(buf: dict, mesh: Mesh) -> dict:
+    """Place a freshly-initialized buffer on the mesh per ``replay_specs``
+    (capacity-sharded tensors, replicated scalars)."""
+    replay_shards(mesh, int(buf["capacity"]))  # validate divisibility
+    specs = replay_specs()
+    return {
+        k: jax.tree.map(lambda x: jax.device_put(
+            jnp.asarray(x), NamedSharding(mesh, specs[k])), v)
+        for k, v in buf.items()
+    }
 
 
 def batch_axes(mesh: Mesh, batch_size: int) -> Optional[Tuple[str, ...]]:

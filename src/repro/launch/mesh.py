@@ -42,6 +42,14 @@ def make_expert_mesh(n_devices: int = None):
     return _expert_mesh_cached(n_devices or len(jax.devices()))
 
 
+def make_train_mesh(n_devices: int = None):
+    """Mesh for the router-training substrate: the same 1-D ``expert`` axis
+    the scheduling engine shards over — ``training.make_iteration(mesh=...)``
+    splits the replay buffer's capacity axis across it while params / envs
+    stay replicated (see ``repro.core.training``)."""
+    return make_expert_mesh(n_devices)
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU runs)."""
     n = len(jax.devices())

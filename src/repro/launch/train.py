@@ -8,6 +8,13 @@ production mesh; on CPU (--reduced) it trains the reduced config of the
 same family on the host mesh — the end-to-end path (data pipeline ->
 microbatched step -> checkpoint/restart -> straggler detection) is
 identical.
+
+Router mode shards the DRL router's replay buffer over the expert mesh
+(``make_train_mesh``) and runs the collect->insert->update iteration under
+``shard_map`` — bit-identical to single-device training:
+
+    PYTHONPATH=src python -m repro.launch.train --router --iters 200 \
+        --router-mesh
 """
 from __future__ import annotations
 
@@ -18,12 +25,45 @@ import jax
 
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               make_train_mesh)
 from repro.train.trainer import Trainer, TrainerConfig
+
+
+def train_router_main(args) -> None:
+    """Train the QoS router, optionally with the capacity-sharded replay
+    buffer on the expert mesh (``--router-mesh``)."""
+    from repro.core import features, sac as sac_lib, training
+    from repro.env import env as env_lib
+
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+    sac_cfg = sac_lib.SACConfig(
+        n_actions=env_cfg.n_experts + 1,
+        flat_dim=env_cfg.n_experts * 3,
+        n_run_edges=(features.seg_run_rows(env_cfg)
+                     if args.obs_fmt == "segments" else None))
+    tc = training.TrainConfig(iterations=args.iters, obs_fmt=args.obs_fmt)
+    mesh = make_train_mesh() if args.router_mesh else None
+    if mesh is not None:
+        print(f"[train] replay capacity sharded over {mesh}")
+    params, history = training.train_router(
+        env_cfg, sac_cfg, tc, pool=pool, mesh=mesh,
+        log_fn=lambda m: print(f"  it={m['iteration']} "
+                               f"rew={m['collect_reward']:.3f}"))
+    print(f"[train] router done: final reward "
+          f"{history[-1]['collect_reward']:.3f}")
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
+    p.add_argument("--router", action="store_true",
+                   help="train the QoS DRL router instead of an LM")
+    p.add_argument("--router-mesh", action="store_true",
+                   help="shard the replay buffer over the expert mesh")
+    p.add_argument("--obs-fmt", default="padded",
+                   choices=["padded", "segments"])
+    p.add_argument("--iters", type=int, default=400)
     p.add_argument("--arch", default="qwen1.5-0.5b")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--global-batch", type=int, default=8)
@@ -36,6 +76,10 @@ def main() -> None:
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--production-mesh", action="store_true")
     args = p.parse_args()
+
+    if args.router:
+        train_router_main(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

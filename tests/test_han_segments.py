@@ -1,0 +1,156 @@
+"""Segment (edge-list) HAN obs layout: numerical equivalence with the
+padded layout and linear-in-N memory scaling (no O(N^2) intermediates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features, han as han_lib, sac as sac_lib, training
+from repro.env import env as env_lib
+
+
+def _rand_padded_obs(key, n, r=5, w=5):
+    ks = jax.random.split(key, 6)
+    return {
+        "expert": jax.random.normal(ks[0], (n, features.EXP_FEATS)),
+        "run": jax.random.normal(ks[1], (n, r, features.REQ_FEATS)),
+        "wait": jax.random.normal(ks[2], (n, w, features.REQ_FEATS)),
+        "run_mask": jax.random.bernoulli(ks[3], 0.6, (n, r)),
+        "wait_mask": jax.random.bernoulli(ks[4], 0.4, (n, w)),
+        "arrived": jax.random.normal(ks[5], (features.REQ_FEATS,)),
+    }
+
+
+def _env_obs(n_experts=6, steps=25):
+    cfg = env_lib.EnvConfig(n_experts=n_experts)
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(0))
+    for i in range(steps):
+        state, _, _ = env_lib.step(cfg, pool, state,
+                                   jnp.int32(1 + i % n_experts))
+    return cfg, pool, state
+
+
+def test_to_segments_is_pure_reshape():
+    obs = _rand_padded_obs(jax.random.PRNGKey(0), 4, r=3, w=2)
+    seg = features.to_segments(obs)
+    n_run = 4 * 3
+    np.testing.assert_array_equal(np.asarray(seg["req"][:n_run]),
+                                  np.asarray(obs["run"]).reshape(n_run, -1))
+    np.testing.assert_array_equal(np.asarray(seg["req"][n_run:]),
+                                  np.asarray(obs["wait"]).reshape(4 * 2, -1))
+    np.testing.assert_array_equal(np.asarray(seg["req_mask"][:n_run]),
+                                  np.asarray(obs["run_mask"]).reshape(-1))
+    ids = np.asarray(han_lib.segment_ids(4, n_run, seg["req"].shape[0]))
+    np.testing.assert_array_equal(ids[:n_run], np.repeat(np.arange(4), 3))
+    np.testing.assert_array_equal(ids[n_run:], np.repeat(np.arange(4), 2))
+
+
+@pytest.mark.parametrize("n_experts", [6, 256])
+def test_forward_segments_matches_padded(n_experts):
+    """Same parameters, both layouts, same embeddings — at paper scale and
+    at fleet scale (N=256, the HAN-obs scaling target)."""
+    obs = _rand_padded_obs(jax.random.PRNGKey(1), n_experts)
+    params = han_lib.init_params(jax.random.PRNGKey(2))
+    arr_p, exp_p = han_lib.forward(params, obs)
+    arr_s, exp_s = han_lib.forward_segments(
+        params, features.to_segments(obs), n_run=n_experts * 5)
+    np.testing.assert_allclose(np.asarray(arr_s), np.asarray(arr_p),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(exp_s), np.asarray(exp_p),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_forward_segments_matches_padded_env_obs():
+    """Equivalence on a real env state (valid-mask structure from the
+    engine, not random), through build_obs's fmt switch."""
+    cfg, pool, state = _env_obs()
+    obs_p = features.build_obs(cfg, pool, state)
+    obs_s = features.build_obs(cfg, pool, state, fmt="segments")
+    assert set(obs_s) == {"expert", "req", "req_mask", "arrived"}
+    params = han_lib.init_params(jax.random.PRNGKey(3))
+    arr_p, _ = han_lib.forward(params, obs_p)
+    arr_s, _ = han_lib.forward_segments(params, obs_s,
+                                        n_run=features.seg_run_rows(cfg))
+    np.testing.assert_allclose(np.asarray(arr_s), np.asarray(arr_p),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_sac_embed_dispatches_on_layout():
+    cfg, pool, state = _env_obs(n_experts=3)
+    sac_cfg = sac_lib.SACConfig(n_actions=4, hidden=16, flat_dim=9,
+                                n_run_edges=features.seg_run_rows(cfg))
+    params = sac_lib.init_params(jax.random.PRNGKey(0), sac_cfg)
+    obs_p = features.build_obs(cfg, pool, state)
+    obs_s = features.build_obs(cfg, pool, state, fmt="segments")
+    z_p = sac_lib.embed(params, sac_cfg, obs_p)
+    z_s = sac_lib.embed(params, sac_cfg, obs_s)
+    np.testing.assert_allclose(np.asarray(z_s), np.asarray(z_p),
+                               rtol=2e-5, atol=2e-6)
+    # batched obs vmap automatically in both layouts
+    batched = jax.tree.map(lambda x: jnp.stack([x, x]), obs_s)
+    zb = sac_lib.embed(params, sac_cfg, batched)
+    assert zb.shape == (2, z_s.shape[-1])
+    np.testing.assert_allclose(np.asarray(zb[0]), np.asarray(z_s),
+                               rtol=1e-5, atol=1e-6)
+    # segment obs without the static run/wait split is a config error
+    bad = sac_lib.SACConfig(n_actions=4, hidden=16, flat_dim=9)
+    with pytest.raises(ValueError):
+        sac_lib.embed(sac_lib.init_params(jax.random.PRNGKey(0), bad),
+                      bad, obs_s)
+
+
+def test_zero_pred_ablations_layout_consistent():
+    """_maybe_zero_preds zeroes the same channels in both layouts."""
+    cfg, pool, state = _env_obs(n_experts=3)
+    tc = training.TrainConfig(zero_score_pred=True, zero_len_pred=True)
+    obs_p = features.build_obs(cfg, pool, state)
+    obs_s = features.build_obs(cfg, pool, state, fmt="segments")
+    zp = training._maybe_zero_preds(tc, obs_p)
+    zs = training._maybe_zero_preds(tc, obs_s)
+    want = features.to_segments(zp)
+    for k in ("expert", "req", "req_mask", "arrived"):
+        np.testing.assert_array_equal(np.asarray(zs[k]), np.asarray(want[k]))
+    assert float(jnp.abs(zs["req"][:, features.REQ_PRED_S]).max()) == 0.0
+    assert float(jnp.abs(zs["req"][:, features.REQ_PRED_D]).max()) == 0.0
+
+
+def _max_intermediate_elems(fn, *args):
+    """Largest intermediate array (in elements) anywhere in fn's jaxpr."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+
+    def walk(jx):
+        best = 0
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "size"):
+                    best = max(best, int(aval.size))
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    best = max(best, walk(inner))
+        return best
+
+    return walk(jaxpr.jaxpr)
+
+
+@pytest.mark.parametrize("fwd", ["padded", "segments"])
+def test_han_memory_scales_linearly_in_n(fwd):
+    """Doubling N from 128 -> 256 must scale the largest HAN intermediate
+    ~2x (linear), not ~4x (an O(N^2) attention/adjacency tensor).  This is
+    the fleet-scale guard for the N>=256 obs path."""
+    params = han_lib.init_params(jax.random.PRNGKey(0))
+
+    def measure(n):
+        obs = _rand_padded_obs(jax.random.PRNGKey(1), n)
+        if fwd == "padded":
+            return _max_intermediate_elems(
+                lambda p, o: han_lib.forward(p, o), params, obs)
+        seg = features.to_segments(obs)
+        return _max_intermediate_elems(
+            lambda p, o: han_lib.forward_segments(p, o, n_run=n * 5),
+            params, seg)
+
+    m128, m256 = measure(128), measure(256)
+    assert m256 <= 2.5 * m128, (m128, m256)
