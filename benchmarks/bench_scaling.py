@@ -9,14 +9,26 @@ plus the beyond-paper fleet-scale sweeps:
     HAN obs path — padded layout at N=64 as the reference, segment
     (edge-list) layout at both scales.  The N=256 rows exercise the
     fleet-scale obs path whose linear-in-N memory is asserted by
-    tests/test_han_segments.py.
+    tests/test_han_segments.py, and
+
+  * ragged heterogeneous fleets (`ragged_sweep`): N=256 with per-expert
+    queue capacities drawn from the pool's memory spread
+    (`profiles.memory_caps`) vs the uniform fleet — engine steps/sec plus
+    the peak `segments`-obs intermediate, which must shrink with
+    sum(caps) (the dead padded edges are dropped, not masked).
 
 RL policies are trained at N=6 (paper trains per setting; our default
 harness reuses the N=6 policy only where shapes match, so RL rows appear
 for N=6 and heuristics cover the sweep — pass --train-per-n for the full
-paper protocol)."""
+paper protocol).
+
+``run(quick=True)`` is the tier-1 CI shape (the committed
+BENCH_scaling.json is recorded with it): fig11 + ragged rows + a 2-iter
+train_sweep, skipping the backend_sweep duplicate that the engine suite
+already gates."""
 from __future__ import annotations
 
+import functools
 import sys
 import time
 
@@ -27,6 +39,57 @@ from benchmarks import common
 from repro.env import env as env_lib
 
 TRAIN_N = (64, 256)
+
+
+def ragged_sweep(n_experts: int = 256, n_steps: int = 150) -> None:
+    """Ragged-vs-uniform fleet at N=256: per-expert queue capacities from
+    the pool's memory spread (`profiles.memory_caps`) against the uniform
+    fleet with the same packed widths.  Reports engine advance throughput
+    (steps/sec over an inject+advance scan, capped pushes included) and
+    the peak `segments`-obs HAN intermediate — the ragged rows must show
+    the same engine row shape with obs memory shrunk toward sum(caps)."""
+    from benchmarks import bench_engine
+    from repro.core import features, han as han_lib
+    from repro.core.introspect import max_intermediate_elems
+    from repro.env import engine
+
+    base = env_lib.EnvConfig(n_experts=n_experts,
+                             run_cap=bench_engine.R,
+                             wait_cap=bench_engine.W)
+    pool = env_lib.make_env_pool(base)
+    rcfg = env_lib.with_ragged_caps(base, pool)
+    han_params = han_lib.init_params(jax.random.PRNGKey(0))
+    for label, cfg in (("uniform", base), ("ragged", rcfg)):
+        run_caps, wait_caps = env_lib.queue_caps(cfg)
+
+        def inject(q, n, t, _wc=wait_caps):
+            q, _ = engine.push_wait(
+                q, n, p=bench_engine.REQ["p"],
+                d_true=bench_engine.REQ["d_true"],
+                score=bench_engine.REQ["score"],
+                pred_s=bench_engine.REQ["pred_s"],
+                pred_d=bench_engine.REQ["pred_d"], t=t, wait_cap=_wc)
+            return q
+
+        adv = functools.partial(engine.advance_all,
+                                run_caps=run_caps, wait_caps=wait_caps)
+        runner = bench_engine._make_runner(pool, n_experts, n_steps,
+                                           engine.empty_queues, inject, adv)
+        secs, (_, done) = bench_engine._time(runner)
+
+        state = env_lib.reset(cfg, pool, jax.random.PRNGKey(1))
+        obs = features.build_obs(cfg, pool, state, fmt="segments")
+        n_run = features.seg_run_rows(cfg)
+        peak = max_intermediate_elems(
+            lambda p, o: han_lib.forward_segments(
+                p, o, n_run=n_run,
+                run_caps=cfg.run_caps, wait_caps=cfg.wait_caps),
+            han_params, obs)
+        common.emit(
+            f"ragged_fleet/N{n_experts}/{label}", secs / n_steps * 1e6,
+            f"steps_per_s={n_steps / secs:.1f};done={float(done):.0f};"
+            f"obs_rows={int(obs['req'].shape[0])};"
+            f"peak_obs_intermediate={peak}")
 
 
 def train_sweep(n_list=TRAIN_N, iters: int = 3) -> None:
@@ -75,7 +138,8 @@ def train_sweep(n_list=TRAIN_N, iters: int = 3) -> None:
                 f"updates_per_s={tc.updates_per_iter / per_iter:.2f}")
 
 
-def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
+def run(n_steps: int = 3000, train_per_n: bool = False,
+        quick: bool = False) -> None:
     for n in (3, 6, 9, 12):
         env_cfg = env_lib.EnvConfig(n_experts=n)
         pool = env_lib.make_env_pool(env_cfg)
@@ -85,6 +149,13 @@ def run(n_steps: int = 3000, train_per_n: bool = False) -> None:
             m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
             us = m["wall_s"] / n_steps * 1e6
             common.emit(f"fig11_N{n}/{pol.name}", us, common.fmt_metrics(m))
+    ragged_sweep()
+    if quick:
+        # tier-1 CI shape (committed BENCH_scaling.json): the engine suite
+        # already gates backend timings, so skip the backend_sweep
+        # duplicate and keep the train rows short
+        train_sweep(iters=2)
+        return
     # shorter than bench_engine's 200-step sweep: these rows are the
     # scaling *shape*, not the --check baseline (which only gates the
     # engine suite), and a full `benchmarks.run` already pays for that one

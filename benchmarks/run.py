@@ -25,10 +25,12 @@ CI & benchmarks
 Two lanes run in ``.github/workflows/ci.yml``:
 
   * tier-1 (push/PR, jax matrix: pinned minimum 0.4.35 + latest):
-    ``scripts/ci.sh`` = fast tests (``-m "not slow"``) + the engine and
-    routing perf gates, i.e. ``--quick --only <suite> --check
+    ``scripts/ci.sh`` = fast tests (``-m "not slow"``) + the engine,
+    routing and scaling perf gates, i.e. ``--quick --only <suite> --check
     --require-baseline --tol 1.8`` with ``REPRO_BENCH_RL=0`` (heuristic
-    routing rows only — no router quick-training on shared runners);
+    routing/scaling rows only — no router quick-training on shared
+    runners; ``--quick`` also keeps the scaling suite CI-shaped, see
+    ``bench_scaling``);
   * nightly (scheduled): the ``slow`` suites (multi-device subprocess
     tests, system tests) plus this harness end-to-end with ``--check``
     over every committed baseline.
@@ -47,6 +49,8 @@ box)::
     PYTHONPATH=src python -m benchmarks.run --quick --only engine --json
     REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
         --only routing --json
+    REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
+        --only scaling --json
 
 and commit the rewritten ``BENCH_<suite>.json`` (CI-sized: ``--quick`` +
 ``REPRO_BENCH_RL=0`` keep step counts and row sets identical to what
@@ -110,7 +114,8 @@ def main() -> None:
         section("latency", lambda: bench_latency.run(n_steps=steps_s))
     if want("fig11", "scaling"):
         from benchmarks import bench_scaling
-        section("scaling", lambda: bench_scaling.run(n_steps=steps_s))
+        section("scaling", lambda: bench_scaling.run(n_steps=steps_s,
+                                                     quick=args.quick))
     if want("fig12", "rates"):
         from benchmarks import bench_rates
         section("rates", lambda: bench_rates.run(n_steps=steps_s))

@@ -3,6 +3,11 @@ policies on the Poisson workload; loads the trained QoS router if present,
 otherwise quick-trains one.
 
     PYTHONPATH=src python examples/edge_routing_demo.py [--steps 4000]
+
+``--ragged-caps`` runs the fleet heterogeneous end to end: per-expert
+queue capacities derived from each expert's memory
+(``profiles.memory_caps``), the engine masking admissions against them,
+and the load-aware heuristics switching to per-expert occupancy.
 """
 import argparse
 import os
@@ -28,24 +33,37 @@ def load_or_train(env_cfg, pool, path="experiments/routers/qos.npz",
     return sac_cfg, params
 
 
-def main() -> None:
+def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=4000)
     p.add_argument("--workload", default="poisson",
                    choices=["poisson", "realworld"])
-    args = p.parse_args()
+    p.add_argument("--ragged-caps", action="store_true",
+                   help="heterogeneous fleet: per-expert queue capacities "
+                        "from pool memory (profiles.memory_caps)")
+    p.add_argument("--quick-iters", type=int, default=150,
+                   help="fallback router training iterations when no "
+                        "checkpoint exists")
+    args = p.parse_args(argv)
 
-    import dataclasses
     from repro.env.workload import WorkloadConfig
     env_cfg = env_lib.EnvConfig(
         workload=WorkloadConfig(kind=args.workload))
     pool = env_lib.make_env_pool(env_cfg)
-    sac_cfg, params = load_or_train(env_cfg, pool)
+    caps = None
+    if args.ragged_caps:
+        env_cfg = env_lib.with_ragged_caps(env_cfg, pool)
+        caps = (env_cfg.run_caps, env_cfg.wait_caps)
+        print(f"[demo] ragged fleet: run_caps={env_cfg.run_caps} "
+              f"wait_caps={env_cfg.wait_caps}")
+    sac_cfg, params = load_or_train(env_cfg, pool,
+                                    quick_iters=args.quick_iters)
 
     policies = [
         routers.round_robin(env_cfg.n_experts),
-        routers.shortest_queue(env_cfg.n_experts),
+        routers.shortest_queue(env_cfg.n_experts, caps=caps),
         routers.bert_router(),
+        routers.quality_least_loaded(caps=caps),
         routers.sac_policy("QoS-RL (ours)", sac_cfg, params),
     ]
     print(f"\n{'policy':>16s} {'avg QoS':>8s} {'lat/tok':>9s} "

@@ -1,5 +1,11 @@
-"""Quickstart: train a reduced ~1M-param LM of an assigned architecture on
-the synthetic pipeline for a few hundred steps, with checkpointing.
+"""Quickstart: the repo's two pillars in one short run —
+
+  1. train a reduced ~1M-param LM of an assigned architecture on the
+     synthetic pipeline for a few hundred steps, with checkpointing, then
+  2. route requests across a heterogeneous edge-expert fleet end to end:
+     per-expert queue capacities derived from each expert's memory
+     (``profiles.memory_caps``), the engine masking admissions against
+     them, evaluated with the capacity-aware QLL heuristic.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen1.5-0.5b]
 """
@@ -13,12 +19,7 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def main() -> None:
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="qwen1.5-0.5b")
-    p.add_argument("--steps", type=int, default=200)
-    args = p.parse_args()
-
+def train_lm(args) -> None:
     cfg = reduce_config(get_config(args.arch))
     print(f"[quickstart] arch={args.arch} (reduced: {cfg.n_layers}L "
           f"d{cfg.d_model} v{cfg.vocab})")
@@ -30,8 +31,39 @@ def main() -> None:
                                       global_batch=16))
         state = trainer.init_or_restore(jax.random.PRNGKey(0))
         state = trainer.run(state, iter(data))
-    print("[quickstart] done — loss should have dropped well below "
+    print("[quickstart] LM done — loss should have dropped well below "
           "ln(vocab) =", round(float(jax.numpy.log(cfg.vocab)), 2))
+
+
+def route_ragged_fleet(args) -> None:
+    """Heterogeneous-capacity fleet end to end: ragged queue shapes from
+    pool memory, capacity-masked admission, occupancy-aware routing."""
+    from repro.core import routers, training
+    from repro.env import env as env_lib
+
+    env_cfg = env_lib.EnvConfig()
+    pool = env_lib.make_env_pool(env_cfg)
+    env_cfg = env_lib.with_ragged_caps(env_cfg, pool)
+    print(f"[quickstart] ragged fleet: run_caps={env_cfg.run_caps} "
+          f"wait_caps={env_cfg.wait_caps}")
+    pol = routers.quality_least_loaded(
+        caps=(env_cfg.run_caps, env_cfg.wait_caps))
+    m = training.evaluate(env_cfg, pool, pol, n_steps=args.route_steps,
+                          n_envs=2)
+    print(f"[quickstart] routed {args.route_steps} requests with "
+          f"{pol.name}: avg QoS {m['avg_qos']:.4f}, "
+          f"{m['avg_latency_per_token']*1e3:.2f} ms/token, "
+          f"{m['completed']:.0f} completed, {m['dropped']:.0f} dropped")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen1.5-0.5b")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--route-steps", type=int, default=1000)
+    args = p.parse_args(argv)
+    train_lm(args)
+    route_ragged_fleet(args)
 
 
 if __name__ == "__main__":

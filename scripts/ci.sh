@@ -18,5 +18,5 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # only — no router quick-training on a shared runner; the nightly full
 # bench covers the RL rows).
 REPRO_BENCH_RL=0 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.run --quick --only engine,routing \
+    python -m benchmarks.run --quick --only engine,routing,scaling \
     --check --require-baseline --tol 1.8

@@ -13,20 +13,26 @@ Two layouts (``fmt=``):
   * ``"padded"``   — per-expert request tensors ``run (N, R, 6)`` /
     ``wait (N, W, 6)`` with validity masks (the PR 1 encoding);
   * ``"segments"`` — the flat edge-list encoding for fleet-scale N: one
-    request-node tensor ``req (N*(R+W), 6)`` with a ``seg`` expert-id
-    vector, consumed by ``han.forward_segments`` via segment-softmax
-    attention.  Request->expert edges are materialized once instead of
-    once per (expert, meta-path) pad block, every HAN intermediate stays
-    O(N*(R+W)*D) — never O(N^2) — and the layout is ready for ragged
-    per-expert capacities.  Run edges occupy rows [0, N*R), wait edges
-    [N*R, N*(R+W)), both ordered expert-major, so the content is a pure
-    reshape of the padded layout (equivalence asserted in
-    tests/test_han_segments.py).
+    request-node tensor ``req (E, 6)`` with a ``seg`` expert-id vector,
+    consumed by ``han.forward_segments`` via segment-softmax attention.
+    Request->expert edges are materialized once instead of once per
+    (expert, meta-path) pad block, every HAN intermediate stays O(E*D) —
+    never O(N^2).  On a uniform fleet E = N*(R+W): run edges occupy rows
+    [0, N*R), wait edges [N*R, N*(R+W)), both expert-major, and the
+    content is a pure reshape of the padded layout.  On a RAGGED fleet
+    (``EnvConfig.run_caps``/``wait_caps``) the dead beyond-cap slots are
+    dropped entirely — E = sum(run_caps) + sum(wait_caps), so obs
+    intermediates scale with the fleet's TOTAL capacity, not
+    N * max(cap); the expert-major row order is kept with each expert
+    contributing exactly its cap's rows.  Equivalence with the padded
+    (masked) layout in both regimes is asserted in
+    tests/test_han_segments.py.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.env import engine_layout as layout
 
@@ -83,10 +89,27 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
     # --- expert nodes (N, 7) ---
     tok = jnp.where(run_valid, run_p + run_d_cur, 0)
     e_n = jnp.sum(tok, -1).astype(jnp.float32) * pool.mem_per_token / pool.mem_capacity
+    run_caps = getattr(cfg, "run_caps", None)
+    wait_caps = getattr(cfg, "wait_caps", None)
+    if run_caps is None and wait_caps is None:
+        # uniform fleet: occupancy = |Q| / packed width (the seed encoding)
+        occ_run = jnp.mean(run_valid.astype(jnp.float32), -1)
+        occ_wait = jnp.mean(wait_valid.astype(jnp.float32), -1)
+    else:
+        # ragged fleet: occupancy is relative to each expert's OWN cap, so
+        # "full" means the same thing for a 1-slot and a 5-slot expert
+        rc = jnp.asarray(run_caps if run_caps is not None
+                         else (run_valid.shape[1],) * run_valid.shape[0],
+                         jnp.float32)
+        wc = jnp.asarray(wait_caps if wait_caps is not None
+                         else (wait_valid.shape[1],) * wait_valid.shape[0],
+                         jnp.float32)
+        occ_run = jnp.sum(run_valid.astype(jnp.float32), -1) / rc
+        occ_wait = jnp.sum(wait_valid.astype(jnp.float32), -1) / wc
     exp_f = jnp.stack([
         e_n,
-        jnp.mean(run_valid.astype(jnp.float32), -1),
-        jnp.mean(wait_valid.astype(jnp.float32), -1),
+        occ_run,
+        occ_wait,
         r["pred_s"],
         r["pred_d"] / mo,
         pool.k1 * 1e3,
@@ -108,29 +131,57 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         "run_mask": run_valid, "wait_mask": wait_valid,
         "arrived": arr_f,
     }
-    return obs if fmt == "padded" else to_segments(obs)
+    if fmt == "padded":
+        return obs
+    return to_segments(obs, run_caps=run_caps, wait_caps=wait_caps)
 
 
-def to_segments(obs: dict) -> dict:
+def _ragged_rows(caps, width: int) -> np.ndarray:
+    """Static flat row indices into an expert-major (N*width,) layout that
+    keep only each expert's first cap[n] slots (the live ones)."""
+    caps = np.asarray(caps, np.int64)
+    return np.concatenate(
+        [n * width + np.arange(c) for n, c in enumerate(caps)])
+
+
+def to_segments(obs: dict, *, run_caps=None, wait_caps=None) -> dict:
     """Flatten a padded observation into the segment (edge-list) layout:
-    run edges in rows [0, N*R), wait edges in [N*R, N*(R+W)), both
-    expert-major.  The expert-id segment vector is NOT stored — it is a
-    static function of (N, R, W) that ``han.forward_segments`` rebuilds
-    (``han.segment_ids``), which keeps replay-buffer transitions free of
-    constant tensors."""
+    run edges first, then wait edges, both expert-major.  The expert-id
+    segment vector is NOT stored — it is a static function of (N, caps)
+    that ``han.forward_segments`` rebuilds (``han.segment_ids``), which
+    keeps replay-buffer transitions free of constant tensors.
+
+    Uniform fleet (caps None): a pure reshape, rows [0, N*R) run and
+    [N*R, N*(R+W)) wait.  Ragged fleet: ``run_caps``/``wait_caps`` must be
+    CONCRETE per-expert capacities (tuple / numpy, not traced — they are
+    shape data); beyond-cap rows are dropped by a static gather, so the
+    result holds sum(run_caps) + sum(wait_caps) rows and no dead edges."""
     n, r = obs["run"].shape[:2]
     w = obs["wait"].shape[1]
-    req = jnp.concatenate([obs["run"].reshape(n * r, -1),
-                           obs["wait"].reshape(n * w, -1)])
-    mask = jnp.concatenate([obs["run_mask"].reshape(-1),
-                            obs["wait_mask"].reshape(-1)])
-    return {"expert": obs["expert"], "req": req,
-            "req_mask": mask, "arrived": obs["arrived"]}
+    run_flat = obs["run"].reshape(n * r, -1)
+    wait_flat = obs["wait"].reshape(n * w, -1)
+    run_mask = obs["run_mask"].reshape(-1)
+    wait_mask = obs["wait_mask"].reshape(-1)
+    if run_caps is not None:
+        rows = _ragged_rows(run_caps, r)
+        run_flat, run_mask = run_flat[rows], run_mask[rows]
+    if wait_caps is not None:
+        rows = _ragged_rows(wait_caps, w)
+        wait_flat, wait_mask = wait_flat[rows], wait_mask[rows]
+    return {"expert": obs["expert"],
+            "req": jnp.concatenate([run_flat, wait_flat]),
+            "req_mask": jnp.concatenate([run_mask, wait_mask]),
+            "arrived": obs["arrived"]}
 
 
 def seg_run_rows(cfg) -> int:
     """Static count of run-edge rows at the head of ``obs["req"]`` for an
-    env config (``sac.SACConfig.n_run_edges`` is set from this)."""
+    env config (``sac.SACConfig.n_run_edges`` is set from this): the sum
+    of the per-expert run capacities on a ragged fleet, N * run_cap on a
+    uniform one."""
+    caps = getattr(cfg, "run_caps", None)
+    if caps is not None:
+        return int(sum(caps))
     return cfg.n_experts * cfg.run_cap
 
 

@@ -34,6 +34,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.features import EXP_FEATS, REQ_FEATS
 
@@ -142,11 +143,36 @@ def _gat_segment(p: dict, cfg: HANConfig, target: jax.Array,
     return jax.nn.elu(out.reshape(-1, cfg.hidden))
 
 
-def segment_ids(n_experts: int, n_run: int, n_req: int) -> jax.Array:
+def segment_ids(n_experts: int, n_run: int, n_req: int, *,
+                run_caps=None, wait_caps=None) -> jax.Array:
     """Expert id per request-node row of the segment layout (static: run
-    rows [0, n_run) then wait rows, both expert-major)."""
+    rows [0, n_run) then wait rows, both expert-major).  On a ragged
+    fleet, pass the concrete per-expert capacities — expert n contributes
+    run_caps[n] run rows and wait_caps[n] wait rows instead of the uniform
+    n_run/n_experts split."""
+    if run_caps is not None or wait_caps is not None:
+        rc = np.asarray(run_caps if run_caps is not None
+                        else (n_run // n_experts,) * n_experts, np.int32)
+        wc = np.asarray(wait_caps if wait_caps is not None
+                        else ((n_req - n_run) // n_experts,) * n_experts,
+                        np.int32)
+        if int(rc.sum()) != n_run or int(rc.sum() + wc.sum()) != n_req:
+            raise ValueError(
+                f"ragged caps (sum run={int(rc.sum())}, "
+                f"wait={int(wc.sum())}) do not match the segment layout "
+                f"(n_run={n_run}, n_req={n_req})")
+        ar = np.arange(n_experts, dtype=np.int32)
+        return jnp.asarray(np.concatenate([np.repeat(ar, rc),
+                                           np.repeat(ar, wc)]))
     r = n_run // n_experts
     w = (n_req - n_run) // n_experts
+    if r * n_experts != n_run or w * n_experts != n_req - n_run:
+        # a ragged layout reached the uniform path (caps not passed):
+        # silent floor division would misgroup every request's attention
+        raise ValueError(
+            f"segment rows (n_run={n_run}, n_req={n_req}) do not split "
+            f"uniformly over {n_experts} experts — ragged fleets must "
+            f"pass run_caps/wait_caps (SACConfig.run_caps/wait_caps)")
     ar = jnp.arange(n_experts, dtype=jnp.int32)
     return jnp.concatenate([jnp.repeat(ar, r), jnp.repeat(ar, w)])
 
@@ -191,11 +217,16 @@ def forward(params: dict, obs: dict, cfg: HANConfig = HANConfig()) -> Tuple[jax.
 
 
 def forward_segments(params: dict, obs: dict, cfg: HANConfig = HANConfig(),
-                     *, n_run: int) -> Tuple[jax.Array, jax.Array]:
+                     *, n_run: int, run_caps=None, wait_caps=None
+                     ) -> Tuple[jax.Array, jax.Array]:
     """``forward`` over the segment (edge-list) obs layout
     (``features.to_segments``): obs carries ``req (E, F)`` / ``req_mask
     (E,)`` with run edges in rows [0, n_run).  Same parameters, same
-    output; every intermediate is O(E * hidden) = O(N * (R + W) * hidden).
+    output; every intermediate is O(E * hidden).  On a uniform fleet
+    E = N * (R + W); on a ragged one pass the concrete per-expert
+    ``run_caps``/``wait_caps`` so the rebuilt segment ids match the
+    ragged row layout — E = sum(caps), i.e. obs memory scales with the
+    fleet's total capacity rather than N * max(cap).
     """
     exp_h = jnp.tanh(obs["expert"] @ params["proj_expert"])      # (N, D)
     req_h = jnp.tanh(obs["req"] @ params["proj_req"])            # (E, D)
@@ -203,7 +234,7 @@ def forward_segments(params: dict, obs: dict, cfg: HANConfig = HANConfig(),
     mask = obs["req_mask"]
     N = exp_h.shape[0]
     E = req_h.shape[0]
-    seg = segment_ids(N, n_run, E)
+    seg = segment_ids(N, n_run, E, run_caps=run_caps, wait_caps=wait_caps)
     run, wait = slice(0, n_run), slice(n_run, None)
 
     for lp in params["layers"]:

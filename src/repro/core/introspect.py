@@ -1,0 +1,28 @@
+"""Jaxpr introspection helpers shared by tests and benchmarks."""
+from __future__ import annotations
+
+import jax
+
+
+def max_intermediate_elems(fn, *args) -> int:
+    """Largest intermediate array (in elements) anywhere in ``fn``'s
+    jaxpr, sub-jaxprs included.  The single source of the obs-memory
+    metric: tests/test_han_segments.py guards the HAN obs path's scaling
+    with it and benchmarks/bench_scaling.py reports it for the
+    ragged-vs-uniform fleet sweep."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+
+    def walk(jx):
+        best = 0
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "size"):
+                    best = max(best, int(aval.size))
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    best = max(best, walk(inner))
+        return best
+
+    return walk(jaxpr.jaxpr)

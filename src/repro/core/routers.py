@@ -46,15 +46,38 @@ def round_robin(n_experts: int) -> Policy:
     return Policy("RR", init_state, act)
 
 
-def shortest_queue(n_experts: int) -> Policy:
+def _queue_load(env_state, total_caps):
+    """(N,) load signal: absolute queue length (uniform fleet,
+    ``total_caps`` None) or fractional occupancy |Q|/cap (ragged fleet) —
+    a full 1-slot expert must read as loaded, not near-idle."""
+    q = env_state["queues"]
+    qlen = (jnp.sum(layout.run_valid(q), -1)
+            + jnp.sum(layout.wait_valid(q), -1))
+    if total_caps is None:
+        return qlen
+    return qlen.astype(jnp.float32) / total_caps
+
+
+def _total_caps(caps):
+    """Per-expert total slots from a (run_caps, wait_caps) pair, or None."""
+    if caps is None:
+        return None
+    run_caps, wait_caps = caps
+    return jnp.asarray([int(r) + int(w) for r, w in zip(run_caps, wait_caps)],
+                       jnp.float32)
+
+
+def shortest_queue(n_experts: int, caps=None) -> Policy:
+    """Least-loaded routing; ``caps=(run_caps, wait_caps)`` switches the
+    load signal to per-expert occupancy on ragged fleets."""
+    total = _total_caps(caps)
+
     def init_state(key):
         return {}
 
     def act(pstate, env_state, obs, key):
-        q = env_state["queues"]
-        qlen = (jnp.sum(layout.run_valid(q), -1)
-                + jnp.sum(layout.wait_valid(q), -1))
-        return jnp.argmin(qlen).astype(jnp.int32) + 1, pstate
+        return (jnp.argmin(_queue_load(env_state, total)).astype(jnp.int32)
+                + 1, pstate)
 
     return Policy("SQF", init_state, act)
 
@@ -71,21 +94,37 @@ def bert_router() -> Policy:
     return Policy("BR", init_state, act)
 
 
-def quality_least_loaded(slack: int = 2) -> Policy:
+def quality_least_loaded(slack: int = 2, caps=None) -> Policy:
     """Beyond-paper heuristic baseline (QLL): among experts whose queue
     length is within `slack` of the minimum, pick the best predicted
     score.  Combines SQF's congestion-avoidance with BR's quality signal
-    at zero training cost — the strongest non-learned baseline here."""
+    at zero training cost — the strongest non-learned baseline here.
+    With ``caps=(run_caps, wait_caps)`` the load signal is per-expert
+    occupancy and the slack is `slack` slots relative to each expert's
+    own capacity; an expert whose IN-CAP wait queue is full is never
+    eligible — admission happens through the wait queue, so routing there
+    just converts the request into a drop (a tiny fleet member with total
+    capacity <= `slack` would otherwise stay eligible while full).  When
+    NO expert is eligible the policy drops (action 0) rather than paying
+    an impact penalty on a doomed push."""
+    total = _total_caps(caps)
+    wait_capv = None if caps is None else jnp.asarray(
+        [int(w) for w in caps[1]], jnp.int32)
+
     def init_state(key):
         return {}
 
     def act(pstate, env_state, obs, key):
-        q = env_state["queues"]
-        qlen = (jnp.sum(layout.run_valid(q), -1)
-                + jnp.sum(layout.wait_valid(q), -1))
-        ok = qlen <= jnp.min(qlen) + slack
+        load = _queue_load(env_state, total)
+        if total is None:
+            ok = load <= jnp.min(load) + slack  # argmin always eligible
+        else:
+            wlen = jnp.sum(layout.wait_valid(env_state["queues"]), -1)
+            ok = (load <= jnp.min(load) + slack / total) \
+                & (wlen < wait_capv)
         pred = env_state["pending"]["pred_s"]
-        return jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1, pstate
+        a = jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1
+        return jnp.where(jnp.any(ok), a, 0), pstate
 
     return Policy("QLL", init_state, act)
 

@@ -33,6 +33,11 @@ class SACConfig:
     # (features.seg_run_rows(env_cfg)); only needed when training on
     # obs_fmt="segments"
     n_run_edges: Optional[int] = None
+    # ragged-fleet segment layout: the concrete per-expert capacities
+    # (mirrors EnvConfig.run_caps/wait_caps) so the rebuilt segment ids
+    # match the ragged row layout; None = uniform split
+    run_caps: Optional[Tuple[int, ...]] = None
+    wait_caps: Optional[Tuple[int, ...]] = None
 
 
 def _mlp_init(key, dims):
@@ -89,7 +94,8 @@ def embed(params: dict, cfg: SACConfig, obs: dict, *, which: str = "actor") -> j
                 "segment-layout obs need SACConfig.n_run_edges "
                 "(= features.seg_run_rows(env_cfg))")
         one = lambda o: han_lib.forward_segments(
-            han_params, o, cfg.han, n_run=cfg.n_run_edges)[0]
+            han_params, o, cfg.han, n_run=cfg.n_run_edges,
+            run_caps=cfg.run_caps, wait_caps=cfg.wait_caps)[0]
     else:
         one = lambda o: han_lib.forward(han_params, o, cfg.han)[0]
 

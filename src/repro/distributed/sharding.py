@@ -135,9 +135,10 @@ def shard_params_specs(param_shapes, mesh: Mesh, *, train: bool):
 def expert_spec(mesh: Mesh, n_experts: int, ndim: int = 1) -> PartitionSpec:
     """Engine-state sharding (used by ``engine.advance_all`` shard_map):
     dim 0 — the packed expert axis of the scheduling engine's (N, R/W, CH)
-    queue tensors, (N,) clocks and pool scalars — over the ``expert`` mesh
-    axis when present and divisible, trailing slot/channel dims
-    replicated."""
+    queue tensors, (N,) clocks and pool scalars (including the ragged
+    ``run_cap``/``wait_cap`` capacity vectors, which ride in the params
+    tree with the same leading N axis) — over the ``expert`` mesh axis
+    when present and divisible, trailing slot/channel dims replicated."""
     spec = [None] * ndim
     if EXPERT in mesh.shape and mesh.shape[EXPERT] > 1 \
             and n_experts % mesh.shape[EXPERT] == 0:

@@ -45,11 +45,31 @@ Admission order
 ---------------
 ``admit_order`` picks which waiting request an admission pops:
 
-  * ``"fifo"`` — the oldest waiter (smallest ``t_arrive``; the paper's and
-    the seed engine's behaviour), or
-  * ``"qos"``  — the waiter with the highest predicted score ``pred_s``
-    (QoS-weighted admission, a paper follow-on; ties fall back to the
-    lowest slot index in both modes).
+  * ``"fifo"``     — the oldest waiter (smallest ``t_arrive``; the paper's
+    and the seed engine's behaviour),
+  * ``"qos"``      — the waiter with the highest predicted score ``pred_s``
+    (QoS-weighted admission, a paper follow-on), or
+  * ``"qos_aged"`` — the waiter with the highest age-weighted score
+    ``pred_s + QOS_AGE_BETA * (clock - t_arrive)``: pure-qos admission can
+    starve old low-score waiters behind a stream of fresh high-score ones;
+    the aging term guarantees every waiter's priority grows without bound,
+    so starvation is impossible.  Because all waiters of an expert are
+    compared at the same clock, the ordering is equivalent to minimizing
+    the loop-invariant key ``QOS_AGE_BETA * t_arrive - pred_s``.
+
+  Ties fall back to the lowest slot index in all three modes.
+
+Per-expert capacities
+---------------------
+``advance_all(..., run_caps=, wait_caps=)`` takes optional (N,) int32
+capacity vectors bounding how many run/wait slots each expert may use
+(the heterogeneous-fleet contract in ``engine_layout``'s docstring; derive
+them from pool memory with ``profiles.memory_caps``).  Admission masks
+both the free-run-slot search and the waiter selection against the caps
+inside the pure ``advance_shard`` body, so all three backends inherit the
+semantics; with uniform caps (== the packed widths) every mask is
+all-True and the engine is byte-for-byte identical to the capacity-free
+path.
 
 Lockstep advance
 ----------------
@@ -85,7 +105,7 @@ from repro.env.engine_layout import (  # noqa: F401  (re-exported layout API)
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
     WI_VALID, WI_P, WI_D_TRUE, WAIT_I_CH,
     WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE, WAIT_F_CH,
-    empty_queues, push_wait, mem_used,
+    empty_queues, push_wait, mem_used, slot_valid,
     run_valid, run_p, run_d_true, run_d_cur, run_score, run_pred_s,
     run_pred_d, run_t_arrive, run_t_admit,
     wait_valid, wait_p, wait_d_true, wait_score, wait_pred_s, wait_pred_d,
@@ -96,14 +116,40 @@ from repro.env.profiles import ExpertPool
 INF = jnp.float32(1e30)
 
 BACKENDS = ("xla", "pallas", "shard_map")
-ADMIT_ORDERS = ("fifo", "qos")
+ADMIT_ORDERS = ("fifo", "qos", "qos_aged")
+
+# qos_aged admission: priority = pred_s + QOS_AGE_BETA * wait_time.  At
+# 0.5 score-units per second, two seconds of waiting outweigh any possible
+# pred_s gap (pred_s spans [0, 1]), bounding starvation to a few seconds
+# under the paper's arrival rates.
+QOS_AGE_BETA = 0.5
 
 
-def pool_params(pool: ExpertPool) -> dict:
-    """The per-expert (N,) scalars the lockstep body needs."""
-    return {"k1": pool.k1, "k2": pool.k2,
-            "mem_capacity": pool.mem_capacity,
-            "mem_per_token": pool.mem_per_token}
+def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None) -> dict:
+    """The per-expert (N,) scalars the lockstep body needs.  Optional
+    ``run_caps``/``wait_caps`` (N,) int32 capacity vectors join the tree
+    (same leading expert axis, so they shard identically)."""
+    params = {"k1": pool.k1, "k2": pool.k2,
+              "mem_capacity": pool.mem_capacity,
+              "mem_per_token": pool.mem_per_token}
+    if run_caps is not None:
+        params["run_cap"] = jnp.asarray(run_caps, jnp.int32)
+    if wait_caps is not None:
+        params["wait_cap"] = jnp.asarray(wait_caps, jnp.int32)
+    return params
+
+
+def admit_sort_key(wait_f: jax.Array, admit_order: str) -> jax.Array:
+    """The loop-invariant (N, W) key an admission MINIMIZES over live
+    waiters (shared by the XLA body and the Pallas kernel so the backends
+    stay bit-identical)."""
+    if admit_order == "fifo":
+        return wait_f[..., WF_T_ARRIVE]
+    if admit_order == "qos":
+        return -wait_f[..., WF_PRED_S]
+    # qos_aged: argmax over waiters of pred_s + beta*(clock - t_arrive) ==
+    # argmin of beta*t_arrive - pred_s (clock is common per expert).
+    return QOS_AGE_BETA * wait_f[..., WF_T_ARRIVE] - wait_f[..., WF_PRED_S]
 
 
 def advance_shard(params: dict, latency_L: float, queues: dict,
@@ -125,6 +171,12 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     w_cap = queues["wait_i"].shape[1]
     run_slots = jnp.arange(r_cap)[None, :]                 # (1, R)
     wait_slots = jnp.arange(w_cap)[None, :]                # (1, W)
+    # per-expert capacity masks; absent caps mean every packed slot is
+    # live, which makes every mask below all-True (the capacity-free path)
+    run_capv = params.get("run_cap", jnp.full((n,), r_cap, jnp.int32))
+    wait_capv = params.get("wait_cap", jnp.full((n,), w_cap, jnp.int32))
+    run_ok = slot_valid(run_capv, r_cap)                   # (N, R)
+    wait_ok = slot_valid(wait_capv, w_cap)                 # (N, W)
 
     acc0 = {key: jnp.zeros((n,), jnp.float32)
             for key in ("phi", "lat", "score", "wait", "done", "viol")}
@@ -134,8 +186,7 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     # between advances), so the loop closes over wait_i/wait_f and carries
     # only the (N, W) valid mask.
     wait_i0, wait_f0 = queues["wait_i"], queues["wait_f"]
-    w_sort_key = (wait_f0[..., WF_T_ARRIVE] if admit_order == "fifo"
-                  else -wait_f0[..., WF_PRED_S])
+    w_sort_key = admit_sort_key(wait_f0, admit_order)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -154,12 +205,15 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
         run_tokens = jnp.sum(jnp.where(validb, p + d_cur, 0), -1)   # (N,)
         mem = run_tokens * mpt
 
-        # choose action per expert: admit > decode > idle
-        w_key = jnp.where(wvalidb, w_sort_key, INF)
+        # choose action per expert: admit > decode > idle (dead beyond-cap
+        # slots are masked out of both the waiter pick and the free-slot
+        # search; with uniform caps the masks are all-True)
+        w_live = wvalidb & wait_ok
+        w_key = jnp.where(w_live, w_sort_key, INF)
         w_idx = jnp.argmin(w_key, -1)                      # (N,) next waiter
-        w_has = jnp.any(wvalidb, -1)
-        r_free = jnp.argmin(validb, -1)                    # (N,) first empty slot
-        r_has_space = ~jnp.all(validb, -1)
+        w_has = jnp.any(w_live, -1)
+        r_free = jnp.argmin(validb | ~run_ok, -1)          # first live empty slot
+        r_has_space = ~jnp.all(validb | ~run_ok, -1)
         head_i = jnp.take_along_axis(wait_i0, w_idx[:, None, None], 1)[:, 0]
         head_f = jnp.take_along_axis(wait_f0, w_idx[:, None, None], 1)[:, 0]
         head_p = head_i[:, WI_P]
@@ -267,21 +321,24 @@ def _advance_shard_map(params: dict, latency_L: float, queues: dict,
 def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
                 clocks: jax.Array, t_next: jax.Array, *,
                 backend: str = "xla", admit_order: str = "fifo",
+                run_caps=None, wait_caps=None,
                 mesh=None, block_n: int = 128,
                 ) -> Tuple[dict, jax.Array, dict]:
     """Advance all N experts to ``t_next`` on the selected backend (see the
-    module docstring).  ``mesh`` (shard_map only) defaults to a 1-D
-    ``("expert",)`` mesh over all local devices; ``block_n`` (pallas only)
-    is the kernel's expert block size.
+    module docstring).  ``run_caps``/``wait_caps`` (N,) bound each
+    expert's live slots for heterogeneous fleets (None = every packed
+    slot); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
+    mesh over all local devices; ``block_n`` (pallas only) is the kernel's
+    expert block size.
 
     Returns (queues, clocks, acc) with acc entries shaped (N,).
     """
     if admit_order not in ADMIT_ORDERS:  # validate before any dispatch: the
         # pallas path compares the raw string, so a typo must not silently
-        # fall through to qos ordering
+        # fall through to the last ordering
         raise ValueError(f"unknown admit_order {admit_order!r}; "
                          f"expected one of {ADMIT_ORDERS}")
-    params = pool_params(pool)
+    params = pool_params(pool, run_caps, wait_caps)
     if backend == "xla":
         return advance_shard(params, latency_L, queues, clocks, t_next,
                              admit_order=admit_order)

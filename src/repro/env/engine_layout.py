@@ -12,6 +12,29 @@ Queue state is four tensors instead of the seed's 17 named arrays
 below return bools.  Invalid slots may hold stale field values — every
 consumer must mask through the valid channel, never read raw slots.
 
+Per-expert capacities (ragged fleets)
+-------------------------------------
+Queue tensors are packed to a SINGLE slot width per side (R = max run
+capacity, W = max wait capacity) so jit shapes stay static, but each
+expert may own fewer slots than the packed width: capacity vectors
+``run_cap (N,)`` / ``wait_cap (N,)`` int32 bound the slots an expert may
+ever use, and ``slot_valid(caps, width)`` gives the (N, width) bool mask
+of live slots.  The layout contract is therefore:
+
+  * slot j of expert n exists iff ``j < cap[n]``; slots at or beyond the
+    cap are DEAD — never valid, never written, and masked out of every
+    admission/selection (``engine.advance_shard``, ``push_wait``) and out
+    of the ragged observation encoding (``features.build_obs``);
+  * a fleet with uniform caps (cap[n] == width for all n) is byte-for-byte
+    identical to the capacity-free layout — all masks are all-True and
+    every consumer reduces to the pre-caps computation;
+  * capacity vectors ride with the per-expert pool scalars (leading N
+    axis), so they shard over the ``expert`` mesh axis exactly like
+    ``k1``/``k2``/``mem_capacity`` (``distributed.sharding.expert_spec``).
+
+``profiles.memory_caps`` derives ragged capacities from the pool's
+per-expert memory by default.
+
 This module is the ONLY place that knows the channel order.  Everything
 outside the engine/kernel layer (``core/features.py``, ``core/routers.py``,
 ``env.impact_penalty``, tests) consumes queues exclusively through the
@@ -47,6 +70,13 @@ def empty_queues(n: int, r: int, w: int) -> dict:
         "wait_i": jnp.zeros((n, w, WAIT_I_CH), jnp.int32),
         "wait_f": jnp.zeros((n, w, WAIT_F_CH), jnp.float32),
     }
+
+
+def slot_valid(caps: jax.Array, width: int) -> jax.Array:
+    """(N, width) bool mask of live slots for per-expert capacities
+    ``caps (N,)``: slot j of expert n exists iff j < caps[n] (see the
+    module docstring's ragged-capacity contract)."""
+    return jnp.arange(width)[None, :] < jnp.asarray(caps, jnp.int32)[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -120,11 +150,16 @@ def wait_t_arrive(q: dict) -> jax.Array:
 
 def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
               score: jax.Array, pred_s: jax.Array, pred_d: jax.Array,
-              t: jax.Array, gate=True) -> Tuple[dict, jax.Array]:
+              t: jax.Array, gate=True, wait_cap=None) -> Tuple[dict, jax.Array]:
     """Masked push of one request into expert ``n``'s first free waiting
-    slot (no-op when the queue is full or ``gate`` is False).  The single
-    place that knows the wait-side channel order; returns (queues, pushed)."""
+    slot (no-op when the queue is full or ``gate`` is False).  With a
+    per-expert capacity vector ``wait_cap (N,)``, only slots below expert
+    ``n``'s cap count as free — a full in-cap queue rejects the push even
+    when dead padded slots remain.  The single place that knows the
+    wait-side channel order; returns (queues, pushed)."""
     free = ~wait_valid(q)[n]
+    if wait_cap is not None:
+        free = free & slot_valid(wait_cap, q["wait_i"].shape[1])[n]
     pushed = jnp.any(free) & gate
     slot = jnp.argmax(free)
     new_i = jnp.stack([pushed.astype(jnp.int32),

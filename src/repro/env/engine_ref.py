@@ -151,6 +151,123 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
 
 
 # ---------------------------------------------------------------------------
+# Capacity-aware ORACLE EXTENSION (not seed code): the ragged-fleet
+# reference the optimized engine's per-expert run_caps/wait_caps are
+# diffed against in tests/test_engine_equiv.py.  Deliberately the same
+# naive candidate-dict shape as `_advance_one` — slots at or beyond an
+# expert's cap are simply excluded from the free-slot search and the
+# waiter pick (the `engine_layout` dead-slot contract), everything else is
+# the seed semantics verbatim.
+# ---------------------------------------------------------------------------
+
+
+def _advance_one_caps(pool_scalars: dict, latency_L: float, q: dict,
+                      clock: jax.Array, t_next: jax.Array
+                      ) -> Tuple[dict, jax.Array, dict]:
+    """`_advance_one` with per-expert slot capacities ``run_cap``/
+    ``wait_cap`` scalars in ``pool_scalars`` bounding the live slots."""
+    run_ok = jnp.arange(q["run_valid"].shape[0]) < pool_scalars["run_cap"]
+    wait_ok = jnp.arange(q["wait_valid"].shape[0]) < pool_scalars["wait_cap"]
+    k1, k2 = pool_scalars["k1"], pool_scalars["k2"]
+    cap, mpt = pool_scalars["mem_capacity"], pool_scalars["mem_per_token"]
+
+    acc0 = {"phi": jnp.float32(0), "lat": jnp.float32(0),
+            "score": jnp.float32(0), "wait": jnp.float32(0),
+            "done": jnp.float32(0), "viol": jnp.float32(0)}
+
+    def cond(c):
+        q, clock, _ = c
+        has_work = jnp.any(q["run_valid"]) | jnp.any(q["wait_valid"])
+        return (clock < t_next) & has_work
+
+    def body(c):
+        q, clock, acc = c
+        mem = jnp.sum(jnp.where(q["run_valid"],
+                                q["run_p"] + q["run_d_cur"], 0)) * mpt
+        w_live = q["wait_valid"] & wait_ok
+        w_has = jnp.any(w_live)
+        w_key = jnp.where(w_live, q["wait_t_arrive"], INF)
+        w_idx = jnp.argmin(w_key)
+        r_free = jnp.argmin(q["run_valid"] | ~run_ok)  # first live empty slot
+        r_has_space = ~jnp.all(q["run_valid"] | ~run_ok)
+        head_p = q["wait_p"][w_idx]
+        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
+        can_admit = w_has & r_has_space & fits
+
+        # --- candidate A: prefill head ---
+        qa = dict(q)
+        qa["run_valid"] = q["run_valid"].at[r_free].set(True)
+        qa["run_p"] = q["run_p"].at[r_free].set(head_p)
+        qa["run_d_true"] = q["run_d_true"].at[r_free].set(q["wait_d_true"][w_idx])
+        qa["run_d_cur"] = q["run_d_cur"].at[r_free].set(1)  # prefill emits y1
+        qa["run_score"] = q["run_score"].at[r_free].set(q["wait_score"][w_idx])
+        qa["run_pred_s"] = q["run_pred_s"].at[r_free].set(q["wait_pred_s"][w_idx])
+        qa["run_pred_d"] = q["run_pred_d"].at[r_free].set(q["wait_pred_d"][w_idx])
+        qa["run_t_arrive"] = q["run_t_arrive"].at[r_free].set(q["wait_t_arrive"][w_idx])
+        qa["run_t_admit"] = q["run_t_admit"].at[r_free].set(clock)
+        qa["wait_valid"] = q["wait_valid"].at[w_idx].set(False)
+        clock_a = clock + k1 * head_p.astype(jnp.float32)
+
+        # --- candidate B: decode iteration ---
+        run_tokens = jnp.sum(jnp.where(q["run_valid"],
+                                       q["run_p"] + q["run_d_cur"], 0))
+        clock_b = clock + k2 * run_tokens.astype(jnp.float32)
+        d_new = q["run_d_cur"] + q["run_valid"].astype(jnp.int32)
+        finished = q["run_valid"] & (d_new >= q["run_d_true"])
+        lat = (clock_b - q["run_t_arrive"]) / jnp.maximum(
+            q["run_d_true"].astype(jnp.float32), 1.0)
+        ok = lat <= latency_L
+        phi = jnp.where(finished, q["run_score"] * ok.astype(jnp.float32), 0.0)
+        qb = dict(q)
+        qb["run_d_cur"] = d_new
+        qb["run_valid"] = q["run_valid"] & ~finished
+        acc_b = {
+            "phi": acc["phi"] + jnp.sum(phi),
+            "lat": acc["lat"] + jnp.sum(jnp.where(finished, lat, 0.0)),
+            "score": acc["score"] + jnp.sum(jnp.where(finished, q["run_score"], 0.0)),
+            "done": acc["done"] + jnp.sum(finished.astype(jnp.float32)),
+            "viol": acc["viol"] + jnp.sum(
+                (finished & ~ok).astype(jnp.float32)),
+            "wait": acc["wait"] + jnp.sum(jnp.where(
+                finished, q["run_t_admit"] - q["run_t_arrive"], 0.0)),
+        }
+
+        r_has = jnp.any(q["run_valid"])
+        # select: admit > decode > idle
+        use_a = can_admit
+        use_b = (~can_admit) & r_has
+        q_out = jax.tree.map(
+            lambda a, b, base: jnp.where(use_a, a, jnp.where(use_b, b, base)),
+            qa, qb, q)
+        clock_out = jnp.where(use_a, clock_a,
+                              jnp.where(use_b, clock_b, t_next))
+        acc_out = jax.tree.map(
+            lambda nb, base: jnp.where(use_b, nb, base), acc_b, acc)
+        return (q_out, clock_out, acc_out)
+
+    q, clock, acc = jax.lax.while_loop(cond, body, (q, clock, acc0))
+    clock = jnp.maximum(clock, t_next)  # idle experts jump forward
+    return q, clock, acc
+
+
+def advance_all_caps(pool: ExpertPool, latency_L: float, queues: dict,
+                     clocks: jax.Array, t_next: jax.Array,
+                     run_caps, wait_caps) -> Tuple[dict, jax.Array, dict]:
+    """Capacity-aware reference advance: vmap `_advance_one_caps` with
+    per-expert (N,) slot capacities."""
+    scalars = {"k1": pool.k1, "k2": pool.k2,
+               "mem_capacity": pool.mem_capacity,
+               "mem_per_token": pool.mem_per_token,
+               "run_cap": jnp.asarray(run_caps, jnp.int32),
+               "wait_cap": jnp.asarray(wait_caps, jnp.int32)}
+
+    def one(sc, q, clock):
+        return _advance_one_caps(sc, latency_L, q, clock, t_next)
+
+    return jax.vmap(one)(scalars, queues, clocks)
+
+
+# ---------------------------------------------------------------------------
 # Layout converters: legacy named fields <-> packed SoA (repro.env.engine)
 # ---------------------------------------------------------------------------
 

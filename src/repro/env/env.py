@@ -53,13 +53,58 @@ class EnvConfig:
     # l_{j,t} is dominated by waiting time stop triggering false penalties.
     impact_mode: str = "paper"
     # scheduling-engine backend ("xla" | "pallas" | "shard_map") and
-    # wait-queue admission order ("fifo" | "qos") — see repro.env.engine.
+    # wait-queue admission order ("fifo" | "qos" | "qos_aged") — see
+    # repro.env.engine.
     engine_backend: str = "xla"
     admit_order: str = "fifo"
+    # ragged heterogeneous fleet: per-expert queue capacities as length-N
+    # tuples of ints <= run_cap/wait_cap (the packed widths).  None = the
+    # uniform fleet (every expert owns every packed slot) — that path is
+    # byte-for-byte identical to the pre-caps engine.  Derive from pool
+    # memory with `profiles.memory_caps` / `with_ragged_caps`.
+    run_caps: Optional[Tuple[int, ...]] = None
+    wait_caps: Optional[Tuple[int, ...]] = None
 
 
 def make_env_pool(cfg: EnvConfig) -> ExpertPool:
     return profiles.make_pool(cfg.n_experts, cfg.n_types, seed=cfg.seed)
+
+
+def queue_caps(cfg: EnvConfig):
+    """The per-expert (N,) int32 capacity vectors of a ragged fleet, or
+    ``(None, None)`` for a uniform one.  A partially-specified config
+    (only one side ragged) fills the other side with its packed width;
+    caps are validated against ``(n_experts, packed width)`` here so a
+    bad tuple fails loudly at env build time, not inside a jitted step."""
+    if cfg.run_caps is None and cfg.wait_caps is None:
+        return None, None
+    out = []
+    for caps, width, side in ((cfg.run_caps, cfg.run_cap, "run"),
+                              (cfg.wait_caps, cfg.wait_cap, "wait")):
+        if caps is None:
+            caps = (width,) * cfg.n_experts
+        if len(caps) != cfg.n_experts:
+            raise ValueError(
+                f"{side}_caps has {len(caps)} entries for "
+                f"n_experts={cfg.n_experts}")
+        if not all(1 <= c <= width for c in caps):
+            raise ValueError(
+                f"{side}_caps must lie in [1, {width}] (the packed "
+                f"width); got {caps}")
+        out.append(jnp.asarray(caps, jnp.int32))
+    return tuple(out)
+
+
+def with_ragged_caps(cfg: EnvConfig, pool: Optional[ExpertPool] = None,
+                     *, min_cap: int = 1) -> EnvConfig:
+    """A copy of ``cfg`` with memory-derived ragged capacities
+    (``profiles.memory_caps``) — the one-call way to turn a uniform env
+    into a heterogeneous-capacity fleet."""
+    pool = pool if pool is not None else make_env_pool(cfg)
+    rc, wc = profiles.memory_caps(pool, cfg.run_cap, cfg.wait_cap,
+                                  min_cap=min_cap)
+    return dataclasses.replace(cfg, run_caps=tuple(int(c) for c in rc),
+                               wait_caps=tuple(int(c) for c in wc))
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +182,10 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
 
     Reads the queues only through the layout accessors (never raw channel
     indices) so it stays agnostic to the packed layout and to where the
-    expert rows live under the sharded engine backends."""
+    expert rows live under the sharded engine backends.  Ragged fleets
+    need no capacity mask here: the engine_layout contract guarantees a
+    beyond-cap slot is never valid, and every term below is gated on the
+    run-valid channel."""
     q = state["queues"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
     t = state["clock"]
@@ -173,11 +221,14 @@ def _admit(cfg: EnvConfig, state: dict, action: jax.Array) -> Tuple[dict, jax.Ar
     """Push pending request into expert (action-1)'s waiting queue."""
     r = state["pending"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
-    # packed layout: one int + one float scatter instead of 7 field writes
+    _, wait_caps = queue_caps(cfg)
+    # packed layout: one int + one float scatter instead of 7 field writes;
+    # on a ragged fleet the push is rejected once the expert's IN-CAP wait
+    # slots are full, even though dead padded slots remain
     queues, pushed = engine.push_wait(
         state["queues"], n, p=r["p_len"], d_true=r["out_len"][n],
         score=r["score"][n], pred_s=r["pred_s"][n], pred_d=r["pred_d"][n],
-        t=state["clock"], gate=action > 0)
+        t=state["clock"], gate=action > 0, wait_cap=wait_caps)
     dropped = (action == 0) | ((action > 0) & ~pushed)
     state = dict(state)
     state["queues"] = queues
@@ -195,9 +246,11 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
                                          state["clock"], k_arr)
     t_next = state["clock"] + dt
 
+    run_caps, wait_caps = queue_caps(cfg)
     queues, clocks, acc = engine.advance_all(
         pool, cfg.latency_L, state["queues"], state["expert_clock"], t_next,
-        backend=cfg.engine_backend, admit_order=cfg.admit_order)
+        backend=cfg.engine_backend, admit_order=cfg.admit_order,
+        run_caps=run_caps, wait_caps=wait_caps)
     acc = jax.tree.map(lambda x: jnp.sum(x), acc)  # sum over experts
 
     reward = acc["phi"] - penalty - cfg.drop_penalty * dropped

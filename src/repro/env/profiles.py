@@ -88,6 +88,28 @@ def make_pool(n_experts: int = 6, n_types: int = 8, seed: int = 0,
     )
 
 
+def memory_caps(pool: ExpertPool, run_cap: int, wait_cap: int,
+                *, min_cap: int = 1):
+    """Ragged per-expert queue capacities derived from the pool's memory
+    spread: an expert's share of run/wait slots scales with its KV memory
+    (``mem_capacity``), the engine-level expression of the paper's premise
+    that a 0.5B and a 132B expert should not get identical queue shapes.
+
+    ``run_cap``/``wait_cap`` are the PACKED widths (the largest-memory
+    expert keeps them in full, so the packed tensor shapes stay what a
+    uniform fleet would allocate); every other expert gets
+    ``ceil(width * mem/max_mem)`` slots, floored at ``min_cap``.  Returns
+    ``(run_caps, wait_caps)`` as (N,) numpy int32 — deliberately concrete
+    (not traced), because the ragged ``segments`` obs layout uses them as
+    static shape data (``features.to_segments``).
+    """
+    mem = np.asarray(pool.mem_capacity, np.float64)
+    frac = mem / mem.max()
+    rc = np.clip(np.ceil(frac * run_cap), min_cap, run_cap).astype(np.int32)
+    wc = np.clip(np.ceil(frac * wait_cap), min_cap, wait_cap).astype(np.int32)
+    return rc, wc
+
+
 def sample_request(pool: ExpertPool, key: jax.Array):
     """Draw one request: latent type, prompt length, per-expert ground-truth
     (score, output length).  Returns dict of arrays."""

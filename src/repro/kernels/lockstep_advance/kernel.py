@@ -18,7 +18,13 @@ TPU portability notes (vs the jnp body in ``engine.advance_shard``):
     the same first-index tie-breaking;
   * the per-expert accumulator dict becomes a dense (block_n, 6) float32
     tensor (channel order ``ops.ACC_KEYS``);
-  * clocks ride as (N, 1) so every operand is >= 2-D.
+  * clocks ride as (N, 1) so every operand is >= 2-D;
+  * the per-expert pool scalars AND the ragged capacity vectors travel in
+    one dense (block_n, PAR_CH) float32 operand (``PAR_*`` channel order
+    below) — run_cap/wait_cap are small ints, exactly representable in
+    float32, and a uniform fleet (caps == packed widths) makes every
+    capacity mask all-True, reproducing the capacity-free kernel
+    bit-for-bit.
 
 Off-TPU the kernel runs in interpret mode (see ``ops.lockstep_advance``,
 which also carries the ``use_pallas`` escape hatch and the ``ref.py``
@@ -33,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.env.engine import admit_sort_key
 from repro.env.engine_layout import (
     RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR,
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
@@ -43,6 +50,11 @@ from repro.env.engine_layout import (
 # python float (not a jnp scalar: pallas_call forbids captured constants)
 INF = 1e30
 N_ACC = 6  # phi, lat, score, wait, done, viol  (ops.ACC_KEYS order)
+
+# channel order of the packed per-expert parameter operand (ops.py builds
+# it; caps are stored as float32 and re-cast to int32 in the kernel)
+PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP = range(6)
+PAR_CH = 6
 
 
 def _first_index(mask: jax.Array, iota: jax.Array, size: int) -> jax.Array:
@@ -66,21 +78,24 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     run_f0 = run_f_ref[...]                                # (B, R, CF) f32
     wait_i0 = wait_i_ref[...]                              # (B, W, CI) int32
     wait_f0 = wait_f_ref[...]                              # (B, W, CF) f32
-    par = par_ref[...]                                     # (B, 4) f32
+    par = par_ref[...]                                     # (B, PAR_CH) f32
     clocks0 = clk_ref[...][:, 0]                           # (B,)
-    k1, k2 = par[:, 0], par[:, 1]
-    cap, mpt = par[:, 2], par[:, 3]
+    k1, k2 = par[:, PAR_K1], par[:, PAR_K2]
+    cap, mpt = par[:, PAR_MEM_CAP], par[:, PAR_MPT]
+    run_capv = par[:, PAR_RUN_CAP].astype(jnp.int32)       # (B,)
+    wait_capv = par[:, PAR_WAIT_CAP].astype(jnp.int32)
 
     bn, r_cap = run_i0.shape[0], run_i0.shape[1]
     w_cap = wait_i0.shape[1]
     run_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, r_cap), 1)
     wait_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, w_cap), 1)
+    run_ok = run_iota < run_capv[:, None]                  # (B, R) live slots
+    wait_ok = wait_iota < wait_capv[:, None]               # (B, W)
 
     # wait side: fields are loop-invariant, only the valid bit is carried
     wait_p0 = wait_i0[..., WI_P]
     wait_d_true0 = wait_i0[..., WI_D_TRUE]
-    w_sort_key = (wait_f0[..., WF_T_ARRIVE] if admit_order == "fifo"
-                  else -wait_f0[..., WF_PRED_S])
+    w_sort_key = admit_sort_key(wait_f0, admit_order)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -99,13 +114,15 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
         run_tokens = jnp.sum(jnp.where(validb, p + d_cur, 0), -1)   # (B,)
         mem = run_tokens * mpt
 
-        # choose action per expert: admit > decode > idle
-        w_key = jnp.where(wvalidb, w_sort_key, INF)
+        # choose action per expert: admit > decode > idle (beyond-cap
+        # slots are dead: masked out of the waiter pick and slot search)
+        w_live = wvalidb & wait_ok
+        w_key = jnp.where(w_live, w_sort_key, INF)
         min_key = jnp.min(w_key, axis=-1, keepdims=True)
         w_idx = _first_index(w_key == min_key, wait_iota, w_cap)    # (B,)
-        w_has = jnp.any(wvalidb, -1)
-        r_free = _first_index(~validb, run_iota, r_cap)             # (B,)
-        r_has_space = ~jnp.all(validb, -1)
+        w_has = jnp.any(w_live, -1)
+        r_free = _first_index(~validb & run_ok, run_iota, r_cap)    # (B,)
+        r_has_space = ~jnp.all(validb | ~run_ok, -1)
         head_sel = wait_iota == w_idx[:, None]                      # (B, W)
         head_p = _onehot_pick(head_sel, wait_p0)
         fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
@@ -183,8 +200,9 @@ def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
     """Raw pallas_call over expert blocks.
 
     run_i (N, R, CI) i32 | run_f (N, R, CF) f32 | wait_i (N, W, CI) i32 |
-    wait_f (N, W, CF) f32 | par (N, 4) f32 [k1, k2, cap, mpt] |
-    clocks (N, 1) f32 | t_next (1, 1) f32.  N must divide by block_n.
+    wait_f (N, W, CF) f32 | par (N, PAR_CH) f32 [k1, k2, cap, mpt,
+    run_cap, wait_cap] | clocks (N, 1) f32 | t_next (1, 1) f32.  N must
+    divide by block_n.
 
     Returns (run_i, run_f, wait_valid (N, W) i32, clocks (N, 1),
     acc (N, 6) f32 in ``ops.ACC_KEYS`` order).
@@ -205,7 +223,7 @@ def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
             b3(r_cap, ci), b3(r_cap, cf), b3(w_cap, wci), b3(w_cap, wcf),
-            b2(4), b2(1),
+            b2(PAR_CH), b2(1),
         ],
         out_specs=[
             b3(r_cap, ci), b3(r_cap, cf), b2(w_cap), b2(1), b2(N_ACC),

@@ -4,8 +4,14 @@ backend).
 Dispatch mirrors the repo's kernel idiom: ``use_pallas=False`` falls back
 to ``ref.lockstep_advance_ref`` (the engine's XLA while-loop), and off-TPU
 the kernel runs in interpret mode.  N is padded to a multiple of
-``block_n`` with inert experts (no work, zero params) that the lockstep
-loop never touches; their rows are dropped before returning.
+``block_n`` with inert experts (no work, zero params — including zero
+run/wait capacity) that the lockstep loop never touches; their rows are
+dropped before returning.
+
+``params`` may carry optional per-expert ``run_cap``/``wait_cap`` (N,)
+capacity vectors (ragged heterogeneous fleets); they ride in the packed
+(N, PAR_CH) float32 parameter operand (``kernel.PAR_*`` channel order) and
+default to the packed slot widths (every slot live).
 """
 from __future__ import annotations
 
@@ -41,8 +47,14 @@ def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
     n = clocks.shape[0]
     bn = min(block_n, n)
     pad = (-n) % bn
+    r_width = queues["run_i"].shape[1]
+    w_width = queues["wait_i"].shape[1]
+    run_cap = params.get("run_cap", jnp.full((n,), r_width, jnp.int32))
+    wait_cap = params.get("wait_cap", jnp.full((n,), w_width, jnp.int32))
     par = jnp.stack([params["k1"], params["k2"], params["mem_capacity"],
-                     params["mem_per_token"]], axis=-1).astype(jnp.float32)
+                     params["mem_per_token"],
+                     run_cap.astype(jnp.float32),
+                     wait_cap.astype(jnp.float32)], axis=-1).astype(jnp.float32)
     run_i, run_f = queues["run_i"], queues["run_f"]
     wait_i, wait_f = queues["wait_i"], queues["wait_f"]
     clk = clocks[:, None].astype(jnp.float32)

@@ -15,6 +15,11 @@ Router mode shards the DRL router's replay buffer over the expert mesh
 
     PYTHONPATH=src python -m repro.launch.train --router --iters 200 \
         --router-mesh
+
+``--ragged-caps`` additionally runs the env as a ragged heterogeneous
+fleet (per-expert queue capacities from pool memory); with
+``--obs-fmt segments`` the observation edge lists then scale with the
+fleet's total capacity instead of N * max(cap).
 """
 from __future__ import annotations
 
@@ -32,17 +37,25 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 def train_router_main(args) -> None:
     """Train the QoS router, optionally with the capacity-sharded replay
-    buffer on the expert mesh (``--router-mesh``)."""
+    buffer on the expert mesh (``--router-mesh``) and/or a ragged
+    heterogeneous-capacity fleet (``--ragged-caps``: per-expert queue
+    capacities derived from pool memory via ``profiles.memory_caps``)."""
     from repro.core import features, sac as sac_lib, training
     from repro.env import env as env_lib
 
     env_cfg = env_lib.EnvConfig()
     pool = env_lib.make_env_pool(env_cfg)
+    if args.ragged_caps:
+        env_cfg = env_lib.with_ragged_caps(env_cfg, pool)
+        print(f"[train] ragged fleet: run_caps={env_cfg.run_caps} "
+              f"wait_caps={env_cfg.wait_caps}")
     sac_cfg = sac_lib.SACConfig(
         n_actions=env_cfg.n_experts + 1,
         flat_dim=env_cfg.n_experts * 3,
         n_run_edges=(features.seg_run_rows(env_cfg)
-                     if args.obs_fmt == "segments" else None))
+                     if args.obs_fmt == "segments" else None),
+        run_caps=(env_cfg.run_caps if args.obs_fmt == "segments" else None),
+        wait_caps=(env_cfg.wait_caps if args.obs_fmt == "segments" else None))
     tc = training.TrainConfig(iterations=args.iters, obs_fmt=args.obs_fmt)
     mesh = make_train_mesh() if args.router_mesh else None
     if mesh is not None:
@@ -63,6 +76,9 @@ def main() -> None:
                    help="shard the replay buffer over the expert mesh")
     p.add_argument("--obs-fmt", default="padded",
                    choices=["padded", "segments"])
+    p.add_argument("--ragged-caps", action="store_true",
+                   help="heterogeneous fleet: per-expert queue capacities "
+                        "derived from pool memory (profiles.memory_caps)")
     p.add_argument("--iters", type=int, default=400)
     p.add_argument("--arch", default="qwen1.5-0.5b")
     p.add_argument("--steps", type=int, default=100)

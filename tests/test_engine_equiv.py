@@ -34,8 +34,12 @@ def _arrival_stream(steps: int, seed: int = 0):
     }
 
 
-def _admit_named(q, n, req, t):
+def _admit_named(q, n, req, t, wait_caps=None):
     slot_free = ~q["wait_valid"][n]
+    if wait_caps is not None:
+        w = q["wait_valid"].shape[1]
+        slot_free = slot_free & (jnp.arange(w) <
+                                 jnp.asarray(wait_caps, jnp.int32)[n])
     do = jnp.any(slot_free)
     slot = jnp.argmax(slot_free)
     set_at = lambda arr, val: arr.at[n, slot].set(
@@ -51,10 +55,11 @@ def _admit_named(q, n, req, t):
     return q
 
 
-def _admit_packed(q, n, req, t):
+def _admit_packed(q, n, req, t, wait_caps=None):
+    wc = None if wait_caps is None else jnp.asarray(wait_caps, jnp.int32)
     q, _ = engine.push_wait(q, n, p=req["p"], d_true=req["d_true"],
                             score=req["score"], pred_s=req["pred_s"],
-                            pred_d=req["pred_d"], t=t)
+                            pred_d=req["pred_d"], t=t, wait_cap=wc)
     return q
 
 
@@ -76,11 +81,14 @@ def _drive(pool, stream, empty_queues, admit, advance):
     return q, clocks, clock_trace, acc_trace
 
 
-def _drive_backend(pool, stream, backend, admit_order="fifo"):
+def _drive_backend(pool, stream, backend, admit_order="fifo",
+                   run_caps=None, wait_caps=None):
     advance = functools.partial(engine.advance_all, backend=backend,
-                                admit_order=admit_order)
+                                admit_order=admit_order,
+                                run_caps=run_caps, wait_caps=wait_caps)
+    admit = functools.partial(_admit_packed, wait_caps=wait_caps)
     return jax.jit(functools.partial(
-        _drive, pool, stream, engine.empty_queues, _admit_packed, advance))()
+        _drive, pool, stream, engine.empty_queues, admit, advance))()
 
 
 @pytest.fixture(scope="module")
@@ -154,7 +162,7 @@ def test_engines_complete_work(traces):
 
 
 # ---------------------------------------------------------------------------
-# QoS-weighted admission order (admit_order="qos")
+# QoS-weighted admission orders (admit_order="qos" / "qos_aged")
 # ---------------------------------------------------------------------------
 
 
@@ -181,19 +189,158 @@ def test_qos_admit_order_pops_highest_pred_s(backend):
         assert int(jnp.sum(engine.wait_valid(q))) == 1  # other one still waits
 
 
-def test_qos_admit_order_backends_agree():
-    """The qos admission order has no seed oracle, so pin the three
-    backends to each other bit-for-bit on a short stream."""
+@pytest.mark.parametrize("admit_order", ("qos", "qos_aged"))
+def test_qos_admit_order_backends_agree(admit_order):
+    """The qos/qos_aged admission orders have no seed oracle, so pin the
+    three backends to each other bit-for-bit on a short stream."""
     pool = profiles.make_pool(N)
     stream = _arrival_stream(80, seed=3)
-    ref = _drive_backend(pool, stream, "xla", admit_order="qos")
+    ref = _drive_backend(pool, stream, "xla", admit_order=admit_order)
     for backend in ("pallas", "shard_map"):
-        got = _drive_backend(pool, stream, backend, admit_order="qos")
+        got = _drive_backend(pool, stream, backend, admit_order=admit_order)
         for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # and qos must actually diverge from fifo on this stream
+    # and the order must actually diverge from fifo on this stream
     fifo = _drive_backend(pool, stream, "xla", admit_order="fifo")
     diff = any(
         not np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(fifo)))
-    assert diff, "qos admission order never changed an outcome"
+    assert diff, f"{admit_order} admission order never changed an outcome"
+
+
+@pytest.mark.parametrize("backend", ("xla", "pallas"))
+def test_qos_aged_admission_prevents_starvation(backend):
+    """An old low-score waiter must beat a fresh high-score one once
+    QOS_AGE_BETA * wait gap exceeds the pred_s gap — the starvation case
+    pure qos gets wrong (it admits the 0.9 regardless of age)."""
+    pool = profiles.make_pool(1)
+    want = {"qos": 0.9, "qos_aged": 0.2}
+    for order, expect in want.items():
+        q = engine.empty_queues(1, 1, 2)
+        # old + low score: aged key = 0.5*0.0 - 0.2 = -0.2
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.5,
+                                pred_s=0.2, pred_d=50.0, t=0.0)
+        # fresh + high score: aged key = 0.5*4.0 - 0.9 = 1.1 -> loses
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.9,
+                                pred_s=0.9, pred_d=50.0, t=4.0)
+        t_next = jnp.float32(4.0) + pool.k1[0] * 10.0 * 0.5
+        q, _, _ = jax.jit(lambda q, c, t: engine.advance_all(
+            pool, LAT_L, q, c, t, backend=backend, admit_order=order))(
+                q, jnp.full((1,), 4.0, jnp.float32), t_next)
+        assert bool(engine.run_valid(q)[0, 0])
+        got = float(engine.run_pred_s(q)[0, 0])
+        assert got == pytest.approx(want[order]), (order, got)
+
+
+# ---------------------------------------------------------------------------
+# Ragged heterogeneous capacities (run_caps / wait_caps)
+# ---------------------------------------------------------------------------
+
+# Expert 2 is the smallest (1 run slot, 1 wait slot): with the Poisson
+# stream round-robining over experts it fills instantly, so full-queue
+# rejection at the smallest expert is exercised on every drive.
+RUN_CAPS = (2, 4, 1, 3, 4, 2)
+WAIT_CAPS = (2, 3, 1, 4, 2, 3)
+
+
+def _drive_caps_ref(pool, stream):
+    advance = lambda pool, L, q, c, t: engine_ref.advance_all_caps(
+        pool, L, q, c, t, RUN_CAPS, WAIT_CAPS)
+    admit = functools.partial(_admit_named, wait_caps=WAIT_CAPS)
+    return jax.jit(functools.partial(
+        _drive, pool, stream, engine_ref.empty_queues, admit, advance))()
+
+
+@pytest.fixture(scope="module")
+def ragged_traces():
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(STEPS)
+    out = {"ref": _drive_caps_ref(pool, stream)}
+    for backend in BACKENDS:
+        out[backend] = _drive_backend(pool, stream, backend,
+                                      run_caps=RUN_CAPS,
+                                      wait_caps=WAIT_CAPS)
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ragged_caps_backends_match_ref(ragged_traces, backend):
+    """Every backend must reproduce the capacity-aware seed-style oracle
+    (`engine_ref.advance_all_caps`) exactly on a ragged fleet: clocks,
+    completion accumulators and final queue contents."""
+    (ref_q, ref_clocks, ref_trace, ref_acc) = ragged_traces["ref"]
+    (new_q, new_clocks, new_trace, new_acc) = ragged_traces[backend]
+    np.testing.assert_allclose(np.asarray(ref_trace), np.asarray(new_trace),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref_clocks), np.asarray(new_clocks),
+                               rtol=0, atol=1e-6)
+    for k in ref_acc:
+        np.testing.assert_allclose(
+            np.asarray(ref_acc[k]), np.asarray(new_acc[k]),
+            rtol=0, atol=1e-6, err_msg=f"acc[{k}] diverged")
+    np.testing.assert_array_equal(np.asarray(ref_acc["done"]),
+                                  np.asarray(new_acc["done"]))
+    unpacked = engine_ref.unpack_queues(new_q)
+    np.testing.assert_array_equal(np.asarray(ref_q["run_valid"]),
+                                  np.asarray(unpacked["run_valid"]))
+    np.testing.assert_array_equal(np.asarray(ref_q["wait_valid"]),
+                                  np.asarray(unpacked["wait_valid"]))
+    rv = np.asarray(ref_q["run_valid"])
+    for k in ("run_p", "run_d_true", "run_d_cur", "run_score",
+              "run_t_arrive", "run_t_admit"):
+        np.testing.assert_allclose(
+            np.where(rv, np.asarray(ref_q[k]), 0),
+            np.where(rv, np.asarray(unpacked[k]), 0),
+            rtol=0, atol=1e-6, err_msg=f"{k} diverged on valid slots")
+
+
+def test_ragged_caps_respected_and_rejection_exercised(ragged_traces):
+    """No expert may ever hold a valid slot at or beyond its cap, work
+    must still complete, and the smallest expert's wait queue must have
+    rejected pushes (otherwise the ragged stream is vacuous)."""
+    (q, _, _, acc) = ragged_traces["xla"]
+    rv = np.asarray(engine.run_valid(q))
+    wv = np.asarray(engine.wait_valid(q))
+    for n in range(N):
+        assert not rv[n, RUN_CAPS[n]:].any(), f"expert {n} beyond run cap"
+        assert not wv[n, WAIT_CAPS[n]:].any(), f"expert {n} beyond wait cap"
+    assert float(np.sum(np.asarray(acc["done"]))) > 50.0
+    # replay the stream counting rejected pushes at the smallest expert
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(STEPS)
+    wc = jnp.asarray(WAIT_CAPS, jnp.int32)
+
+    def step(carry, x):
+        q, clocks, t = carry
+        req = {k: x[k] for k in ("p", "d_true", "score", "pred_s", "pred_d")}
+        q2, pushed = engine.push_wait(
+            q, x["expert"], p=req["p"], d_true=req["d_true"],
+            score=req["score"], pred_s=req["pred_s"], pred_d=req["pred_d"],
+            t=t, wait_cap=wc)
+        t_next = t + x["dt"]
+        q2, clocks, _ = engine.advance_all(
+            pool, LAT_L, q2, clocks, t_next,
+            run_caps=RUN_CAPS, wait_caps=WAIT_CAPS)
+        rejected = (~pushed) & (x["expert"] == 2)
+        return (q2, clocks, t_next), rejected
+
+    init = (engine.empty_queues(N, R, W), jnp.zeros((N,), jnp.float32),
+            jnp.float32(0.0))
+    _, rejections = jax.jit(
+        lambda: jax.lax.scan(step, init, stream))()
+    assert int(jnp.sum(rejections)) > 0, \
+        "smallest expert never rejected a push — rejection path untested"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_uniform_caps_bit_identical_to_capacity_free(backend):
+    """caps == packed widths must be BYTE-identical to running without
+    caps at all (every mask all-True): same queue tensors bit for bit,
+    same clocks, same accumulators."""
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(120, seed=7)
+    base = _drive_backend(pool, stream, backend)
+    capped = _drive_backend(pool, stream, backend,
+                            run_caps=(R,) * N, wait_caps=(W,) * N)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(capped)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

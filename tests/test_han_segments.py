@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import features, han as han_lib, sac as sac_lib, training
+from repro.core.introspect import max_intermediate_elems as \
+    _max_intermediate_elems  # the obs-memory metric (shared with bench_scaling)
 from repro.env import env as env_lib
 
 
@@ -21,13 +23,13 @@ def _rand_padded_obs(key, n, r=5, w=5):
     }
 
 
-def _env_obs(n_experts=6, steps=25):
-    cfg = env_lib.EnvConfig(n_experts=n_experts)
+def _env_obs(n_experts=6, steps=25, cfg=None):
+    cfg = cfg if cfg is not None else env_lib.EnvConfig(n_experts=n_experts)
     pool = env_lib.make_env_pool(cfg)
     state = env_lib.reset(cfg, pool, jax.random.PRNGKey(0))
     for i in range(steps):
         state, _, _ = env_lib.step(cfg, pool, state,
-                                   jnp.int32(1 + i % n_experts))
+                                   jnp.int32(1 + i % cfg.n_experts))
     return cfg, pool, state
 
 
@@ -115,26 +117,6 @@ def test_zero_pred_ablations_layout_consistent():
     assert float(jnp.abs(zs["req"][:, features.REQ_PRED_D]).max()) == 0.0
 
 
-def _max_intermediate_elems(fn, *args):
-    """Largest intermediate array (in elements) anywhere in fn's jaxpr."""
-    jaxpr = jax.make_jaxpr(fn)(*args)
-
-    def walk(jx):
-        best = 0
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and hasattr(aval, "size"):
-                    best = max(best, int(aval.size))
-            for p in eqn.params.values():
-                inner = getattr(p, "jaxpr", None)
-                if inner is not None:
-                    best = max(best, walk(inner))
-        return best
-
-    return walk(jaxpr.jaxpr)
-
-
 @pytest.mark.parametrize("fwd", ["padded", "segments"])
 def test_han_memory_scales_linearly_in_n(fwd):
     """Doubling N from 128 -> 256 must scale the largest HAN intermediate
@@ -154,3 +136,96 @@ def test_han_memory_scales_linearly_in_n(fwd):
 
     m128, m256 = measure(128), measure(256)
     assert m256 <= 2.5 * m128, (m128, m256)
+
+
+# ---------------------------------------------------------------------------
+# Ragged heterogeneous capacities: true edge lists (no dead padded rows)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_caps(n, width, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple(int(c) for c in rng.integers(1, width + 1, n))
+
+
+def _mask_beyond_caps(obs, run_caps, wait_caps):
+    """Enforce the engine_layout dead-slot contract on a random padded obs:
+    slots at or beyond an expert's cap are never valid."""
+    obs = dict(obs)
+    r, w = obs["run"].shape[1], obs["wait"].shape[1]
+    rc = jnp.asarray(run_caps)[:, None]
+    wc = jnp.asarray(wait_caps)[:, None]
+    obs["run_mask"] = obs["run_mask"] & (jnp.arange(r)[None, :] < rc)
+    obs["wait_mask"] = obs["wait_mask"] & (jnp.arange(w)[None, :] < wc)
+    obs["run"] = jnp.where(obs["run_mask"][..., None], obs["run"], 0.0)
+    obs["wait"] = jnp.where(obs["wait_mask"][..., None], obs["wait"], 0.0)
+    return obs
+
+
+def test_ragged_segments_match_padded():
+    """Dropping the dead beyond-cap rows entirely (ragged edge list) must
+    give the same HAN output as the padded path masking them."""
+    n, width = 32, 5
+    run_caps = _ragged_caps(n, width, seed=1)
+    wait_caps = _ragged_caps(n, width, seed=2)
+    obs = _mask_beyond_caps(_rand_padded_obs(jax.random.PRNGKey(4), n),
+                            run_caps, wait_caps)
+    seg = features.to_segments(obs, run_caps=run_caps, wait_caps=wait_caps)
+    assert seg["req"].shape[0] == sum(run_caps) + sum(wait_caps)
+    params = han_lib.init_params(jax.random.PRNGKey(5))
+    arr_p, exp_p = han_lib.forward(params, obs)
+    arr_s, exp_s = han_lib.forward_segments(
+        params, seg, n_run=sum(run_caps),
+        run_caps=run_caps, wait_caps=wait_caps)
+    np.testing.assert_allclose(np.asarray(arr_s), np.asarray(arr_p),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(exp_s), np.asarray(exp_p),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_ragged_env_obs_end_to_end():
+    """build_obs(fmt="segments") on a ragged EnvConfig emits exactly
+    sum(caps) rows and matches the padded forward through sac.embed's
+    config plumbing."""
+    base = env_lib.EnvConfig(n_experts=4, run_cap=4, wait_cap=4)
+    cfg = env_lib.with_ragged_caps(base)
+    assert cfg.run_caps is not None and min(cfg.run_caps) < cfg.run_cap
+    cfg, pool, state = _env_obs(cfg=cfg, steps=30)
+    obs_p = features.build_obs(cfg, pool, state)
+    obs_s = features.build_obs(cfg, pool, state, fmt="segments")
+    assert obs_s["req"].shape[0] == sum(cfg.run_caps) + sum(cfg.wait_caps)
+    assert features.seg_run_rows(cfg) == sum(cfg.run_caps)
+    sac_cfg = sac_lib.SACConfig(
+        n_actions=cfg.n_experts + 1, hidden=16,
+        flat_dim=cfg.n_experts * 3,
+        n_run_edges=features.seg_run_rows(cfg),
+        run_caps=cfg.run_caps, wait_caps=cfg.wait_caps)
+    params = sac_lib.init_params(jax.random.PRNGKey(0), sac_cfg)
+    z_p = sac_lib.embed(params, sac_cfg, obs_p)
+    z_s = sac_lib.embed(params, sac_cfg, obs_s)
+    np.testing.assert_allclose(np.asarray(z_s), np.asarray(z_p),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_segments_memory_scales_with_sum_caps():
+    """The acceptance guard: ragged `segments` obs intermediates scale with
+    sum(caps), not N * max(cap).  Halving every cap (2 of width 5) must
+    shrink the largest forward_segments intermediate to ~4/10 of the
+    uniform fleet's — a padded/masked encoding would show NO shrink."""
+    n, width = 128, 5
+    params = han_lib.init_params(jax.random.PRNGKey(0))
+    obs = _rand_padded_obs(jax.random.PRNGKey(1), n)
+
+    def measure(run_caps, wait_caps):
+        masked = _mask_beyond_caps(obs, run_caps, wait_caps)
+        seg = features.to_segments(masked, run_caps=run_caps,
+                                   wait_caps=wait_caps)
+        return _max_intermediate_elems(
+            lambda p, o: han_lib.forward_segments(
+                p, o, n_run=sum(run_caps),
+                run_caps=run_caps, wait_caps=wait_caps),
+            params, seg)
+
+    uniform = measure((width,) * n, (width,) * n)
+    ragged = measure((2,) * n, (2,) * n)
+    assert ragged <= 0.5 * uniform, (ragged, uniform)

@@ -92,6 +92,70 @@ def test_empty_queue_invariants(n, r, w):
     assert not bool(jnp.any(engine.wait_valid(q)))
 
 
+# Module-level driver so hypothesis examples share ONE jitted compilation
+# (capacities and the arrival stream are runtime arrays; shapes are fixed).
+_CAPS_N, _CAPS_R, _CAPS_W, _CAPS_STEPS = 3, 4, 3, 40
+
+
+def _caps_driver():
+    from repro.env import engine, profiles
+
+    if not hasattr(_caps_driver, "_fn"):
+        pool = profiles.make_pool(_CAPS_N)
+
+        @jax.jit
+        def drive(run_caps, wait_caps, stream):
+            def step(carry, x):
+                q, clocks, t = carry
+                q, _ = engine.push_wait(
+                    q, x["expert"], p=x["p"], d_true=x["d"], score=0.5,
+                    pred_s=0.5, pred_d=x["d"].astype(jnp.float32), t=t,
+                    wait_cap=wait_caps)
+                t_next = t + x["dt"]
+                q, clocks, _ = engine.advance_all(
+                    pool, 0.030, q, clocks, t_next,
+                    run_caps=run_caps, wait_caps=wait_caps)
+                # per-step invariant terms: count over caps / beyond-cap hits
+                rv, wv = engine.run_valid(q), engine.wait_valid(q)
+                run_over = jnp.sum(rv, -1) - run_caps
+                wait_over = jnp.sum(wv, -1) - wait_caps
+                beyond = (jnp.sum(rv & ~engine.slot_valid(run_caps, _CAPS_R))
+                          + jnp.sum(wv & ~engine.slot_valid(wait_caps, _CAPS_W)))
+                bad = (jnp.max(run_over) > 0) | (jnp.max(wait_over) > 0) \
+                    | (beyond > 0)
+                return (q, clocks, t_next), bad
+
+            init = (engine.empty_queues(_CAPS_N, _CAPS_R, _CAPS_W),
+                    jnp.zeros((_CAPS_N,), jnp.float32), jnp.float32(0.0))
+            _, bad = jax.lax.scan(step, init, stream)
+            return jnp.any(bad)
+
+        _caps_driver._fn = drive
+    return _caps_driver._fn
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    run_caps=st.tuples(*[st.integers(1, 4)] * _CAPS_N),
+    wait_caps=st.tuples(*[st.integers(1, 3)] * _CAPS_N),
+)
+def test_ragged_caps_never_exceeded(seed, run_caps, wait_caps):
+    """Engine-layout contract: on a ragged fleet no expert ever holds more
+    valid slots than its capacity, and no slot at or beyond the cap is
+    ever valid — across admissions, decodes and full-queue rejections."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    stream = {
+        "dt": jax.random.exponential(ks[0], (_CAPS_STEPS,)) / 5.0,
+        "expert": jax.random.randint(ks[1], (_CAPS_STEPS,), 0, _CAPS_N),
+        "p": jax.random.randint(ks[2], (_CAPS_STEPS,), 16, 512),
+        "d": jax.random.randint(ks[3], (_CAPS_STEPS,), 8, 300),
+    }
+    bad = _caps_driver()(jnp.asarray(run_caps, jnp.int32),
+                         jnp.asarray(wait_caps, jnp.int32), stream)
+    assert not bool(bad)
+
+
 @given(
     lam=st.floats(0.5, 20.0),
     kind=st.sampled_from(["poisson", "realworld"]),

@@ -72,6 +72,37 @@ def test_predictor_learns_above_chance(setup):
     assert m["len_top1"] > 0.2
 
 
+def test_heterogeneous_caps_end_to_end(setup):
+    """Ragged fleet through the full env loop: memory-derived caps, engine
+    masking, occupancy-aware heuristics — and the capacity ordering must
+    show up as bigger experts doing more of the work."""
+    cfg, pool = setup
+    rcfg = env_lib.with_ragged_caps(cfg, pool)
+    assert min(rcfg.run_caps) < cfg.run_cap  # the pool's spread is real
+    pol = routers.quality_least_loaded(caps=(rcfg.run_caps, rcfg.wait_caps))
+    m = training.evaluate(rcfg, pool, pol, n_steps=1500, n_envs=2)
+    assert m["completed"] > 0
+    assert m["avg_qos"] > 0
+
+
+def test_examples_run_heterogeneous_fleet():
+    """Smoke: both examples run a heterogeneous-caps pool end to end with
+    tiny budgets (the ISSUE-4 examples contract)."""
+    import os
+    import sys
+
+    ex_dir = os.path.join(os.path.dirname(__file__), os.pardir, "examples")
+    sys.path.insert(0, ex_dir)
+    try:
+        import edge_routing_demo
+        import quickstart
+        quickstart.main(["--steps", "2", "--route-steps", "60"])
+        edge_routing_demo.main(["--steps", "60", "--ragged-caps",
+                                "--quick-iters", "1"])
+    finally:
+        sys.path.remove(ex_dir)
+
+
 def test_serving_engine_end_to_end():
     """Real JAX engine: requests flow through continuous batching and the
     latency calibration returns sane gradients."""
