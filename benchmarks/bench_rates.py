@@ -21,11 +21,13 @@ def run(n_steps: int = 3000) -> None:
     # wait-queue admission order under burst load (ROADMAP follow-ons):
     # "qos" pops the waiter with the highest pred_s instead of the oldest;
     # "qos_aged" adds the anti-starvation aging term
-    # pred_s + QOS_AGE_BETA * wait so old low-score waiters still drain.
+    # pred_s + QOS_AGE_BETA * wait so old low-score waiters still drain;
+    # "edf" pops the waiter closest to violating latency_L (earliest
+    # predicted deadline t_arrive + L * pred_d first).
     from repro.core import routers
     wl = WorkloadConfig(kind="realworld", rate=7.0, burst_rate_mult=6.0,
                         burst_on_prob=0.05)
-    for order in ("fifo", "qos", "qos_aged"):
+    for order in ("fifo", "qos", "qos_aged", "edf"):
         env_cfg = env_lib.EnvConfig(workload=wl, admit_order=order)
         pool = env_lib.make_env_pool(env_cfg)
         pol = routers.quality_least_loaded()

@@ -1,0 +1,55 @@
+"""Scenario sweep — QoS / violation rate / steps/sec for every named
+scenario in the ``repro.scenarios`` registry (the paper's *dynamic
+workload* claim, beyond its stationary Fig. 7/9 setting).
+
+Each scenario row evaluates the load-aware heuristics end to end through
+the scripted conditions (flash crowds, expert failures, stragglers,
+memory claim/release).  SQF/QLL run availability-aware (they skip down
+experts); BR is availability-blind on purpose — the gap between the two
+is the value of exposing fleet state to the router.  ``derived`` carries
+the usual QoS metrics plus ``evict`` (requests whose slots were claimed
+mid-flight).
+
+The RL rows follow the tier-1 convention: ``REPRO_BENCH_RL=0`` (CI) keeps
+the suite heuristics-only; the nightly full bench includes the QoS router
+evaluated on each scenario.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro import scenarios
+from repro.core import routers
+from repro.env import env as env_lib
+
+
+def _policies(env_cfg, pool, include_rl: bool):
+    pols = [
+        routers.bert_router(),
+        routers.shortest_queue(env_cfg.n_experts, env_cfg=env_cfg),
+        routers.quality_least_loaded(env_cfg=env_cfg),
+    ]
+    if include_rl:
+        sac_cfg, params = common.load_router("qos", env_cfg, pool=pool)
+        pols.append(routers.sac_policy("QoS-RL(ours)", sac_cfg, params))
+    return pols
+
+
+def _fmt(m) -> str:
+    return common.fmt_metrics(m) + f";evict={m['evicted']:.0f}"
+
+
+def run(n_steps: int = 800) -> None:
+    include_rl = os.environ.get("REPRO_BENCH_RL", "1") != "0"
+    for name in scenarios.names():
+        env_cfg = env_lib.EnvConfig(scenario=name)
+        pool = env_lib.make_env_pool(env_cfg)
+        for pol in _policies(env_cfg, pool, include_rl):
+            m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+            us = m["wall_s"] / n_steps * 1e6
+            common.emit(f"scenario_{name}/{pol.name}", us, _fmt(m))
+
+
+if __name__ == "__main__":
+    run()

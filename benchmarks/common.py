@@ -132,9 +132,16 @@ def load_router(variant: str, env_cfg, *, quick_iters: int = 80,
                                 flat_dim=env_cfg.n_experts * 3)
     path = os.path.join(ROUTER_DIR, f"{variant}.npz")
     if os.path.exists(path):
-        return sac_cfg, io.load_pytree(path)
-    print(f"# [bench] {path} missing -> quick-training {quick_iters} iters "
-          f"(results will understate the trained router)", file=sys.stderr)
+        params = io.load_pytree(path)
+        if io.router_ckpt_compatible(params):
+            return sac_cfg, params
+        print(f"# [bench] {path} predates the current obs encoding "
+              f"(expert feature count changed) -> retraining; delete or "
+              f"regenerate the checkpoint to silence this", file=sys.stderr)
+    else:
+        print(f"# [bench] {path} missing -> quick-training {quick_iters} "
+              f"iters (results will understate the trained router)",
+              file=sys.stderr)
     tc = training.TrainConfig(
         iterations=quick_iters, log_every=10_000,
         qos_reward=variant not in ("baseline", "dsa_only"),

@@ -13,7 +13,8 @@ suite).  Sections:
   fig10/table2 e2e latency decomposition + component profile  bench_latency
   fig11        number-of-experts sweep                        bench_scaling
   fig12        arrival-rate sweep                             bench_rates
-  fig13        latency-requirement sweep                      bench_deadlines
+  fig13        latency-req sweep + admission orders           bench_deadlines
+  scenarios    scripted dynamic workload/fleet sweep          bench_scenarios
   fig14/15     long-run QoS + GPU utilization                 bench_longrun
   fig16/17/18  training curves + ablations                    bench_ablation
   engine       advance_all microbenchmark (lockstep vs seed)  bench_engine
@@ -26,11 +27,11 @@ Two lanes run in ``.github/workflows/ci.yml``:
 
   * tier-1 (push/PR, jax matrix: pinned minimum 0.4.35 + latest):
     ``scripts/ci.sh`` = fast tests (``-m "not slow"``) + the engine,
-    routing and scaling perf gates, i.e. ``--quick --only <suite> --check
-    --require-baseline --tol 1.8`` with ``REPRO_BENCH_RL=0`` (heuristic
-    routing/scaling rows only — no router quick-training on shared
-    runners; ``--quick`` also keeps the scaling suite CI-shaped, see
-    ``bench_scaling``);
+    routing, scaling, deadlines and scenarios perf gates, i.e. ``--quick
+    --only <suite> --check --require-baseline --tol 1.8`` with
+    ``REPRO_BENCH_RL=0`` (heuristic rows only — no router quick-training
+    on shared runners; ``--quick`` also keeps the scaling suite
+    CI-shaped, see ``bench_scaling``);
   * nightly (scheduled): the ``slow`` suites (multi-device subprocess
     tests, system tests) plus this harness end-to-end with ``--check``
     over every committed baseline.
@@ -47,10 +48,10 @@ Regenerating baselines (after an intentional perf change, on an idle
 box)::
 
     PYTHONPATH=src python -m benchmarks.run --quick --only engine --json
-    REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
-        --only routing --json
-    REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
-        --only scaling --json
+    for s in routing scaling deadlines scenarios; do
+        REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
+            --only $s --json
+    done
 
 and commit the rewritten ``BENCH_<suite>.json`` (CI-sized: ``--quick`` +
 ``REPRO_BENCH_RL=0`` keep step counts and row sets identical to what
@@ -122,6 +123,9 @@ def main() -> None:
     if want("fig13", "deadlines"):
         from benchmarks import bench_deadlines
         section("deadlines", lambda: bench_deadlines.run(n_steps=steps_s))
+    if want("scenarios"):
+        from benchmarks import bench_scenarios
+        section("scenarios", lambda: bench_scenarios.run(n_steps=steps_s))
     if want("fig14", "fig15", "longrun"):
         from benchmarks import bench_longrun
         section("longrun",

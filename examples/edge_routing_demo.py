@@ -8,6 +8,12 @@ otherwise quick-trains one.
 queue capacities derived from each expert's memory
 (``profiles.memory_caps``), the engine masking admissions against them,
 and the load-aware heuristics switching to per-expert occupancy.
+
+``--scenario <name>`` replays a scripted dynamic scenario from the
+``repro.scenarios`` registry (e.g. ``flash_crowd``, ``rolling_outage``,
+``stress``): arrival-rate events and fleet events (failures, stragglers,
+memory claims) hit every policy identically, and SQF/QLL become
+availability-aware (they steer around down experts).
 """
 import argparse
 import os
@@ -22,11 +28,15 @@ def load_or_train(env_cfg, pool, path="experiments/routers/qos.npz",
                   quick_iters=150):
     sac_cfg = sac_lib.SACConfig(n_actions=env_cfg.n_experts + 1)
     if os.path.exists(path):
-        print(f"[demo] loading trained router from {path}")
         params = io.load_pytree(path)
-        return sac_cfg, params
-    print(f"[demo] no checkpoint at {path}; quick-training "
-          f"{quick_iters} iterations (expect weaker results)")
+        if io.router_ckpt_compatible(params):
+            print(f"[demo] loading trained router from {path}")
+            return sac_cfg, params
+        print(f"[demo] {path} predates the current obs encoding; "
+              f"quick-training instead")
+    else:
+        print(f"[demo] no checkpoint at {path}; quick-training "
+              f"{quick_iters} iterations (expect weaker results)")
     tc = training.TrainConfig(iterations=quick_iters, log_every=50)
     params, _ = training.train_router(env_cfg, sac_cfg, tc, pool=pool,
                                       log_fn=lambda m: print("  ", m))
@@ -41,6 +51,10 @@ def main(argv=None) -> None:
     p.add_argument("--ragged-caps", action="store_true",
                    help="heterogeneous fleet: per-expert queue capacities "
                         "from pool memory (profiles.memory_caps)")
+    p.add_argument("--scenario", default="",
+                   help="named scripted scenario (repro.scenarios "
+                        "registry) for time-varying workload/fleet "
+                        "conditions")
     p.add_argument("--quick-iters", type=int, default=150,
                    help="fallback router training iterations when no "
                         "checkpoint exists")
@@ -56,14 +70,23 @@ def main(argv=None) -> None:
         caps = (env_cfg.run_caps, env_cfg.wait_caps)
         print(f"[demo] ragged fleet: run_caps={env_cfg.run_caps} "
               f"wait_caps={env_cfg.wait_caps}")
+    if args.scenario:
+        import dataclasses
+
+        from repro import scenarios
+        env_cfg = dataclasses.replace(env_cfg, scenario=args.scenario)
+        spec = scenarios.get(args.scenario)
+        print(f"[demo] scenario {spec.name!r}: horizon={spec.horizon:g}s, "
+              f"{len(spec.events)} events")
     sac_cfg, params = load_or_train(env_cfg, pool,
                                     quick_iters=args.quick_iters)
 
     policies = [
         routers.round_robin(env_cfg.n_experts),
-        routers.shortest_queue(env_cfg.n_experts, caps=caps),
+        routers.shortest_queue(env_cfg.n_experts, caps=caps,
+                               env_cfg=env_cfg),
         routers.bert_router(),
-        routers.quality_least_loaded(caps=caps),
+        routers.quality_least_loaded(caps=caps, env_cfg=env_cfg),
         routers.sac_policy("QoS-RL (ours)", sac_cfg, params),
     ]
     print(f"\n{'policy':>16s} {'avg QoS':>8s} {'lat/tok':>9s} "

@@ -3,10 +3,17 @@
 f_q = (p_j, s_hat, d_hat, e_{j,n,t}, d_{j,t}, l_{j,t})  — normalized.
 
 Expert nodes carry (e_n, |Q_run|/R, |Q_wait|/W) plus the pending request's
-per-expert predictions (s_hat_{j,n}, d_hat_{j,n}) and the profiled latency
-gradients (k1, k2) — the per-expert predictions ride on the expert node
-because the arrived-request node connects to *all* experts (§V-B2); this is
-our static-shape encoding of the arrived->expert edge features.
+per-expert predictions (s_hat_{j,n}, d_hat_{j,n}), the profiled latency
+gradients (k1, k2), and the scenario condition channels (up, current-cap
+fraction) — the per-expert predictions ride on the expert node because
+the arrived-request node connects to *all* experts (§V-B2); this is our
+static-shape encoding of the arrived->expert edge features.  The scenario
+channels expose ``repro.scenarios`` dynamics to the router: ``up`` is the
+expert's availability at the current clock (1.0 with no scenario) and the
+cap fraction is its current live slots over its baseline caps (1.0 until
+a memory claim shrinks them), so a trained policy can steer around
+failures and shrunken fleets instead of discovering them through
+penalties alone.
 
 Two layouts (``fmt=``):
 
@@ -34,10 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import scenarios
 from repro.env import engine_layout as layout
 
 REQ_FEATS = 6
-EXP_FEATS = 7
+EXP_FEATS = 9
 
 # request-node feature channels (same order in both layouts)
 REQ_P, REQ_PRED_S, REQ_PRED_D, REQ_MEM, REQ_D_CUR, REQ_LAT = range(6)
@@ -86,11 +94,19 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
     ], axis=-1)
     wait_f = jnp.where(wait_valid[..., None], wait_f, 0.0)
 
-    # --- expert nodes (N, 7) ---
+    # --- expert nodes (N, EXP_FEATS) ---
     tok = jnp.where(run_valid, run_p + run_d_cur, 0)
     e_n = jnp.sum(tok, -1).astype(jnp.float32) * pool.mem_per_token / pool.mem_capacity
+    n_exp = run_valid.shape[0]
     run_caps = getattr(cfg, "run_caps", None)
     wait_caps = getattr(cfg, "wait_caps", None)
+    # per-expert BASELINE caps (packed widths on a uniform fleet): the
+    # occupancy normalizer on ragged fleets and the cap-fraction
+    # denominator under scenarios
+    base_rc = jnp.asarray(run_caps if run_caps is not None
+                          else (run_valid.shape[1],) * n_exp, jnp.float32)
+    base_wc = jnp.asarray(wait_caps if wait_caps is not None
+                          else (wait_valid.shape[1],) * n_exp, jnp.float32)
     if run_caps is None and wait_caps is None:
         # uniform fleet: occupancy = |Q| / packed width (the seed encoding)
         occ_run = jnp.mean(run_valid.astype(jnp.float32), -1)
@@ -98,14 +114,20 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
     else:
         # ragged fleet: occupancy is relative to each expert's OWN cap, so
         # "full" means the same thing for a 1-slot and a 5-slot expert
-        rc = jnp.asarray(run_caps if run_caps is not None
-                         else (run_valid.shape[1],) * run_valid.shape[0],
-                         jnp.float32)
-        wc = jnp.asarray(wait_caps if wait_caps is not None
-                         else (wait_valid.shape[1],) * wait_valid.shape[0],
-                         jnp.float32)
-        occ_run = jnp.sum(run_valid.astype(jnp.float32), -1) / rc
-        occ_wait = jnp.sum(wait_valid.astype(jnp.float32), -1) / wc
+        occ_run = jnp.sum(run_valid.astype(jnp.float32), -1) / base_rc
+        occ_wait = jnp.sum(wait_valid.astype(jnp.float32), -1) / base_wc
+
+    # --- scenario condition channels (up, current-cap fraction) ---
+    st = scenarios.for_cfg(cfg)
+    if st is None:
+        up_f = jnp.ones((n_exp,), jnp.float32)
+        cap_frac = jnp.ones((n_exp,), jnp.float32)
+    else:
+        cur = scenarios.at_time(st, t)
+        up_f = cur["up"].astype(jnp.float32)
+        cap_frac = ((cur["run_cap"] + cur["wait_cap"]).astype(jnp.float32)
+                    / (base_rc + base_wc))
+
     exp_f = jnp.stack([
         e_n,
         occ_run,
@@ -114,6 +136,8 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         r["pred_d"] / mo,
         pool.k1 * 1e3,
         pool.k2 * 1e4,
+        up_f,
+        cap_frac,
     ], axis=-1)
 
     # --- arrived request node (6,) ---

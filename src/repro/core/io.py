@@ -49,3 +49,17 @@ def load_pytree(path: str, like=None):
         return node
 
     return fix(root)
+
+
+def router_ckpt_compatible(params) -> bool:
+    """True when a saved router's HAN expects the CURRENT expert feature
+    count — obs channels grow across PRs (e.g. the scenario up/cap-frac
+    channels widened EXP_FEATS 7->9), and a stale checkpoint would
+    otherwise crash mid-eval with an opaque matmul shape error.  Callers
+    (benchmarks.common.load_router, examples/edge_routing_demo) retrain
+    with a loud message instead."""
+    from repro.core import features
+
+    if not isinstance(params, dict) or "han" not in params:
+        return True  # flat-feature baseline: obs slice [:3] is stable
+    return params["han"]["proj_expert"].shape[0] == features.EXP_FEATS

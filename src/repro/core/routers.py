@@ -20,6 +20,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import scenarios
 from repro.core import sac as sac_lib
 from repro.env import engine_layout as layout
 
@@ -67,17 +68,37 @@ def _total_caps(caps):
                        jnp.float32)
 
 
-def shortest_queue(n_experts: int, caps=None) -> Policy:
+def _scenario_cur(env_cfg, env_state):
+    """Current scenario conditions dict (``scenarios.at_time``), or None
+    when ``env_cfg`` scripts no scenario (the heuristics below skip the
+    masking entirely then, so the scenario-free policies are
+    untouched)."""
+    st = None if env_cfg is None else scenarios.for_cfg(env_cfg)
+    if st is None:
+        return None
+    return scenarios.at_time(st, env_state["clock"])
+
+
+def shortest_queue(n_experts: int, caps=None, env_cfg=None) -> Policy:
     """Least-loaded routing; ``caps=(run_caps, wait_caps)`` switches the
-    load signal to per-expert occupancy on ragged fleets."""
+    load signal to per-expert occupancy on ragged fleets.  With an
+    ``env_cfg`` that scripts a scenario the policy is availability-aware:
+    down experts read as infinitely loaded (routing there would freeze
+    the request), and when the WHOLE fleet is down the policy drops."""
     total = _total_caps(caps)
 
     def init_state(key):
         return {}
 
     def act(pstate, env_state, obs, key):
-        return (jnp.argmin(_queue_load(env_state, total)).astype(jnp.int32)
-                + 1, pstate)
+        load = _queue_load(env_state, total)
+        cur = _scenario_cur(env_cfg, env_state)
+        if cur is None:
+            return jnp.argmin(load).astype(jnp.int32) + 1, pstate
+        up = cur["up"]
+        load = jnp.where(up, load, jnp.inf)
+        a = jnp.argmin(load).astype(jnp.int32) + 1
+        return jnp.where(jnp.any(up), a, 0), pstate
 
     return Policy("SQF", init_state, act)
 
@@ -94,7 +115,7 @@ def bert_router() -> Policy:
     return Policy("BR", init_state, act)
 
 
-def quality_least_loaded(slack: int = 2, caps=None) -> Policy:
+def quality_least_loaded(slack: int = 2, caps=None, env_cfg=None) -> Policy:
     """Beyond-paper heuristic baseline (QLL): among experts whose queue
     length is within `slack` of the minimum, pick the best predicted
     score.  Combines SQF's congestion-avoidance with BR's quality signal
@@ -104,9 +125,17 @@ def quality_least_loaded(slack: int = 2, caps=None) -> Policy:
     own capacity; an expert whose IN-CAP wait queue is full is never
     eligible — admission happens through the wait queue, so routing there
     just converts the request into a drop (a tiny fleet member with total
-    capacity <= `slack` would otherwise stay eligible while full).  When
-    NO expert is eligible the policy drops (action 0) rather than paying
-    an impact penalty on a doomed push."""
+    capacity <= `slack` would otherwise stay eligible while full).  With
+    an ``env_cfg`` that scripts a scenario the policy is additionally
+    availability-aware: a down expert is never eligible (its queues are
+    frozen, so routing there is a doomed push), the eligible-load floor
+    is taken over UP experts only so a frozen idle expert can't mask
+    everyone else out of the slack band, and the full-wait-queue check
+    runs against the CURRENT (possibly claim-shrunken) wait caps — an
+    expert whose live wait slots are all occupied is never eligible,
+    whatever its baseline cap says.  When NO expert is eligible the
+    policy drops (action 0) rather than paying an impact penalty on a
+    doomed push."""
     total = _total_caps(caps)
     wait_capv = None if caps is None else jnp.asarray(
         [int(w) for w in caps[1]], jnp.int32)
@@ -116,12 +145,18 @@ def quality_least_loaded(slack: int = 2, caps=None) -> Policy:
 
     def act(pstate, env_state, obs, key):
         load = _queue_load(env_state, total)
+        cur = _scenario_cur(env_cfg, env_state)
+        if cur is not None:
+            load = jnp.where(cur["up"], load, jnp.inf)
         if total is None:
             ok = load <= jnp.min(load) + slack  # argmin always eligible
         else:
             wlen = jnp.sum(layout.wait_valid(env_state["queues"]), -1)
             ok = (load <= jnp.min(load) + slack / total) \
                 & (wlen < wait_capv)
+        if cur is not None:
+            wlen = jnp.sum(layout.wait_valid(env_state["queues"]), -1)
+            ok = ok & cur["up"] & (wlen < cur["wait_cap"])
         pred = env_state["pending"]["pred_s"]
         a = jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1
         return jnp.where(jnp.any(ok), a, 0), pstate

@@ -55,9 +55,17 @@ Admission order
     the aging term guarantees every waiter's priority grows without bound,
     so starvation is impossible.  Because all waiters of an expert are
     compared at the same clock, the ordering is equivalent to minimizing
-    the loop-invariant key ``QOS_AGE_BETA * t_arrive - pred_s``.
+    the loop-invariant key ``QOS_AGE_BETA * t_arrive - pred_s``, or
+  * ``"edf"``      — earliest deadline first: the waiter closest to
+    violating the latency requirement.  A request violates once its
+    per-token latency ``(t_finish - t_arrive) / d_true`` exceeds
+    ``latency_L``, i.e. its deadline is ``t_arrive + latency_L * d``;
+    with ``pred_d`` standing in for the unknown ``d_true`` the admission
+    minimizes the loop-invariant key ``t_arrive + latency_L * pred_d``.
+    Starvation-free like fifo (every waiter's deadline is fixed and time
+    only moves toward it).
 
-  Ties fall back to the lowest slot index in all three modes.
+  Ties fall back to the lowest slot index in all four modes.
 
 Per-expert capacities
 ---------------------
@@ -70,6 +78,31 @@ inside the pure ``advance_shard`` body, so all three backends inherit the
 semantics; with uniform caps (== the packed widths) every mask is
 all-True and the engine is byte-for-byte identical to the capacity-free
 path.
+
+Scenario conditions (availability / stragglers)
+-----------------------------------------------
+``advance_all(..., up=, k_scale=)`` threads the scenario subsystem's
+time-varying fleet conditions (``repro.scenarios``) through the same
+pool-params tree the capacity vectors ride:
+
+  * ``up`` (N,) bool — a DOWN expert admits nothing and decodes nothing:
+    its only permitted action is idle, so its clock jumps to ``t_next``
+    and queued work freezes in place (latency keeps accruing until
+    recovery).  Callers gate new pushes on ``up`` as well
+    (``env._admit``), so a down expert's queues only ever drain-by-
+    freezing, never grow.
+  * ``k_scale`` (N,) f32 — straggler multiplier folded into ``k1``/``k2``
+    before dispatch, so the backends (including the Pallas kernel's
+    packed parameter operand) see pre-scaled gradients and need no extra
+    channel.
+
+With ``up`` all-True and ``k_scale`` all-ones (the always-up scenario)
+every mask is all-True and every multiply is by 1.0, so the engine is
+byte-for-byte identical to the scenario-free path.  Caps that vary over
+time are just the existing ``run_caps``/``wait_caps`` arguments passed
+per advance; the scenario runtime evicts beyond-cap occupants at the
+step boundary (``scenarios.evict_beyond_cap``) so the dead-slot contract
+holds with the current caps throughout the window.
 
 Lockstep advance
 ----------------
@@ -116,7 +149,7 @@ from repro.env.profiles import ExpertPool
 INF = jnp.float32(1e30)
 
 BACKENDS = ("xla", "pallas", "shard_map")
-ADMIT_ORDERS = ("fifo", "qos", "qos_aged")
+ADMIT_ORDERS = ("fifo", "qos", "qos_aged", "edf")
 
 # qos_aged admission: priority = pred_s + QOS_AGE_BETA * wait_time.  At
 # 0.5 score-units per second, two seconds of waiting outweigh any possible
@@ -125,28 +158,41 @@ ADMIT_ORDERS = ("fifo", "qos", "qos_aged")
 QOS_AGE_BETA = 0.5
 
 
-def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None) -> dict:
+def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None,
+                up=None, k_scale=None) -> dict:
     """The per-expert (N,) scalars the lockstep body needs.  Optional
-    ``run_caps``/``wait_caps`` (N,) int32 capacity vectors join the tree
-    (same leading expert axis, so they shard identically)."""
-    params = {"k1": pool.k1, "k2": pool.k2,
+    ``run_caps``/``wait_caps`` (N,) int32 capacity vectors and the
+    scenario ``up`` availability mask join the tree (same leading expert
+    axis, so they shard identically); a ``k_scale`` straggler multiplier
+    is folded straight into ``k1``/``k2``."""
+    k1, k2 = pool.k1, pool.k2
+    if k_scale is not None:
+        scale = jnp.asarray(k_scale, jnp.float32)
+        k1, k2 = k1 * scale, k2 * scale
+    params = {"k1": k1, "k2": k2,
               "mem_capacity": pool.mem_capacity,
               "mem_per_token": pool.mem_per_token}
     if run_caps is not None:
         params["run_cap"] = jnp.asarray(run_caps, jnp.int32)
     if wait_caps is not None:
         params["wait_cap"] = jnp.asarray(wait_caps, jnp.int32)
+    if up is not None:
+        params["up"] = jnp.asarray(up, jnp.bool_)
     return params
 
 
-def admit_sort_key(wait_f: jax.Array, admit_order: str) -> jax.Array:
+def admit_sort_key(wait_f: jax.Array, admit_order: str,
+                   latency_L: float = 0.0) -> jax.Array:
     """The loop-invariant (N, W) key an admission MINIMIZES over live
     waiters (shared by the XLA body and the Pallas kernel so the backends
-    stay bit-identical)."""
+    stay bit-identical).  ``latency_L`` only matters for ``"edf"``."""
     if admit_order == "fifo":
         return wait_f[..., WF_T_ARRIVE]
     if admit_order == "qos":
         return -wait_f[..., WF_PRED_S]
+    if admit_order == "edf":
+        # earliest (predicted) deadline t_arrive + L * pred_d first
+        return wait_f[..., WF_T_ARRIVE] + latency_L * wait_f[..., WF_PRED_D]
     # qos_aged: argmax over waiters of pred_s + beta*(clock - t_arrive) ==
     # argmin of beta*t_arrive - pred_s (clock is common per expert).
     return QOS_AGE_BETA * wait_f[..., WF_T_ARRIVE] - wait_f[..., WF_PRED_S]
@@ -177,6 +223,9 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     wait_capv = params.get("wait_cap", jnp.full((n,), w_cap, jnp.int32))
     run_ok = slot_valid(run_capv, r_cap)                   # (N, R)
     wait_ok = slot_valid(wait_capv, w_cap)                 # (N, W)
+    # scenario availability: a down expert admits nothing and decodes
+    # nothing — its only permitted action is idle (all-True when absent)
+    upv = params.get("up", jnp.ones((n,), jnp.bool_))      # (N,)
 
     acc0 = {key: jnp.zeros((n,), jnp.float32)
             for key in ("phi", "lat", "score", "wait", "done", "viol")}
@@ -186,7 +235,7 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     # between advances), so the loop closes over wait_i/wait_f and carries
     # only the (N, W) valid mask.
     wait_i0, wait_f0 = queues["wait_i"], queues["wait_f"]
-    w_sort_key = admit_sort_key(wait_f0, admit_order)
+    w_sort_key = admit_sort_key(wait_f0, admit_order, latency_L)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -218,12 +267,12 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
         head_f = jnp.take_along_axis(wait_f0, w_idx[:, None, None], 1)[:, 0]
         head_p = head_i[:, WI_P]
         fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
-        can_admit = w_has & r_has_space & fits
+        can_admit = w_has & r_has_space & fits & upv
         r_has = jnp.any(validb, -1)
 
         adm = active & can_admit
-        dec = active & ~can_admit & r_has
-        idle = active & ~can_admit & ~r_has
+        dec = active & ~can_admit & r_has & upv
+        idle = active & ~can_admit & ~(r_has & upv)
 
         # --- decode: masked in-place over this iteration's decoding rows ---
         dec_rows = dec[:, None] & validb                   # (N, R)
@@ -321,13 +370,15 @@ def _advance_shard_map(params: dict, latency_L: float, queues: dict,
 def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
                 clocks: jax.Array, t_next: jax.Array, *,
                 backend: str = "xla", admit_order: str = "fifo",
-                run_caps=None, wait_caps=None,
+                run_caps=None, wait_caps=None, up=None, k_scale=None,
                 mesh=None, block_n: int = 128,
                 ) -> Tuple[dict, jax.Array, dict]:
     """Advance all N experts to ``t_next`` on the selected backend (see the
     module docstring).  ``run_caps``/``wait_caps`` (N,) bound each
     expert's live slots for heterogeneous fleets (None = every packed
-    slot); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
+    slot); ``up`` (N,) bool marks available experts and ``k_scale`` (N,)
+    scales the latency gradients (scenario conditions; None = all up, no
+    scaling); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
     mesh over all local devices; ``block_n`` (pallas only) is the kernel's
     expert block size.
 
@@ -338,7 +389,7 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
         # fall through to the last ordering
         raise ValueError(f"unknown admit_order {admit_order!r}; "
                          f"expected one of {ADMIT_ORDERS}")
-    params = pool_params(pool, run_caps, wait_caps)
+    params = pool_params(pool, run_caps, wait_caps, up, k_scale)
     if backend == "xla":
         return advance_shard(params, latency_L, queues, clocks, t_next,
                              admit_order=admit_order)

@@ -268,6 +268,150 @@ def advance_all_caps(pool: ExpertPool, latency_L: float, queues: dict,
 
 
 # ---------------------------------------------------------------------------
+# Scenario-aware ORACLE EXTENSION (not seed code): the time-varying-fleet
+# reference for `repro.scenarios` — per-expert availability (`up`),
+# straggler gradient scaling (`k_scale`) and CURRENT capacities on top of
+# `_advance_one_caps`, in the same naive candidate-dict shape.  A down
+# expert admits nothing and decodes nothing (only idle is permitted; its
+# queues freeze), mirroring engine.advance_shard's gating exactly.  The
+# optimized engine's `advance_all(..., up=, k_scale=)` is diffed against
+# this in tests/test_scenarios.py across all three backends.
+# ---------------------------------------------------------------------------
+
+
+def _advance_one_scenario(pool_scalars: dict, latency_L: float, q: dict,
+                          clock: jax.Array, t_next: jax.Array
+                          ) -> Tuple[dict, jax.Array, dict]:
+    """`_advance_one_caps` with an `up` availability scalar gating the
+    admit and decode candidates (idle remains the only action while
+    down)."""
+    run_ok = jnp.arange(q["run_valid"].shape[0]) < pool_scalars["run_cap"]
+    wait_ok = jnp.arange(q["wait_valid"].shape[0]) < pool_scalars["wait_cap"]
+    up = pool_scalars["up"]
+    k1, k2 = pool_scalars["k1"], pool_scalars["k2"]
+    cap, mpt = pool_scalars["mem_capacity"], pool_scalars["mem_per_token"]
+
+    acc0 = {"phi": jnp.float32(0), "lat": jnp.float32(0),
+            "score": jnp.float32(0), "wait": jnp.float32(0),
+            "done": jnp.float32(0), "viol": jnp.float32(0)}
+
+    def cond(c):
+        q, clock, _ = c
+        has_work = jnp.any(q["run_valid"]) | jnp.any(q["wait_valid"])
+        return (clock < t_next) & has_work
+
+    def body(c):
+        q, clock, acc = c
+        mem = jnp.sum(jnp.where(q["run_valid"],
+                                q["run_p"] + q["run_d_cur"], 0)) * mpt
+        w_live = q["wait_valid"] & wait_ok
+        w_has = jnp.any(w_live)
+        w_key = jnp.where(w_live, q["wait_t_arrive"], INF)
+        w_idx = jnp.argmin(w_key)
+        r_free = jnp.argmin(q["run_valid"] | ~run_ok)  # first live empty slot
+        r_has_space = ~jnp.all(q["run_valid"] | ~run_ok)
+        head_p = q["wait_p"][w_idx]
+        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
+        can_admit = w_has & r_has_space & fits & up
+
+        # --- candidate A: prefill head ---
+        qa = dict(q)
+        qa["run_valid"] = q["run_valid"].at[r_free].set(True)
+        qa["run_p"] = q["run_p"].at[r_free].set(head_p)
+        qa["run_d_true"] = q["run_d_true"].at[r_free].set(q["wait_d_true"][w_idx])
+        qa["run_d_cur"] = q["run_d_cur"].at[r_free].set(1)  # prefill emits y1
+        qa["run_score"] = q["run_score"].at[r_free].set(q["wait_score"][w_idx])
+        qa["run_pred_s"] = q["run_pred_s"].at[r_free].set(q["wait_pred_s"][w_idx])
+        qa["run_pred_d"] = q["run_pred_d"].at[r_free].set(q["wait_pred_d"][w_idx])
+        qa["run_t_arrive"] = q["run_t_arrive"].at[r_free].set(q["wait_t_arrive"][w_idx])
+        qa["run_t_admit"] = q["run_t_admit"].at[r_free].set(clock)
+        qa["wait_valid"] = q["wait_valid"].at[w_idx].set(False)
+        clock_a = clock + k1 * head_p.astype(jnp.float32)
+
+        # --- candidate B: decode iteration ---
+        run_tokens = jnp.sum(jnp.where(q["run_valid"],
+                                       q["run_p"] + q["run_d_cur"], 0))
+        clock_b = clock + k2 * run_tokens.astype(jnp.float32)
+        d_new = q["run_d_cur"] + q["run_valid"].astype(jnp.int32)
+        finished = q["run_valid"] & (d_new >= q["run_d_true"])
+        lat = (clock_b - q["run_t_arrive"]) / jnp.maximum(
+            q["run_d_true"].astype(jnp.float32), 1.0)
+        ok = lat <= latency_L
+        phi = jnp.where(finished, q["run_score"] * ok.astype(jnp.float32), 0.0)
+        qb = dict(q)
+        qb["run_d_cur"] = d_new
+        qb["run_valid"] = q["run_valid"] & ~finished
+        acc_b = {
+            "phi": acc["phi"] + jnp.sum(phi),
+            "lat": acc["lat"] + jnp.sum(jnp.where(finished, lat, 0.0)),
+            "score": acc["score"] + jnp.sum(jnp.where(finished, q["run_score"], 0.0)),
+            "done": acc["done"] + jnp.sum(finished.astype(jnp.float32)),
+            "viol": acc["viol"] + jnp.sum(
+                (finished & ~ok).astype(jnp.float32)),
+            "wait": acc["wait"] + jnp.sum(jnp.where(
+                finished, q["run_t_admit"] - q["run_t_arrive"], 0.0)),
+        }
+
+        r_has = jnp.any(q["run_valid"])
+        # select: admit > decode > idle; a down expert can only idle
+        use_a = can_admit
+        use_b = (~can_admit) & r_has & up
+        q_out = jax.tree.map(
+            lambda a, b, base: jnp.where(use_a, a, jnp.where(use_b, b, base)),
+            qa, qb, q)
+        clock_out = jnp.where(use_a, clock_a,
+                              jnp.where(use_b, clock_b, t_next))
+        acc_out = jax.tree.map(
+            lambda nb, base: jnp.where(use_b, nb, base), acc_b, acc)
+        return (q_out, clock_out, acc_out)
+
+    q, clock, acc = jax.lax.while_loop(cond, body, (q, clock, acc0))
+    clock = jnp.maximum(clock, t_next)  # idle experts jump forward
+    return q, clock, acc
+
+
+def advance_all_scenario(pool: ExpertPool, latency_L: float, queues: dict,
+                         clocks: jax.Array, t_next: jax.Array,
+                         run_caps, wait_caps, up, k_scale
+                         ) -> Tuple[dict, jax.Array, dict]:
+    """Scenario-aware reference advance: vmap `_advance_one_scenario`
+    with the CURRENT per-expert (N,) capacities, availability mask and
+    straggler k-multiplier.  `k_scale` is folded into k1/k2 with the same
+    elementwise multiply `engine.pool_params` uses, so the float values
+    match the optimized engine bit for bit."""
+    scale = jnp.asarray(k_scale, jnp.float32)
+    scalars = {"k1": pool.k1 * scale, "k2": pool.k2 * scale,
+               "mem_capacity": pool.mem_capacity,
+               "mem_per_token": pool.mem_per_token,
+               "run_cap": jnp.asarray(run_caps, jnp.int32),
+               "wait_cap": jnp.asarray(wait_caps, jnp.int32),
+               "up": jnp.asarray(up, jnp.bool_)}
+
+    def one(sc, q, clock):
+        return _advance_one_scenario(sc, latency_L, q, clock, t_next)
+
+    return jax.vmap(one)(scalars, queues, clocks)
+
+
+def evict_beyond_cap_named(q: dict, run_caps, wait_caps
+                           ) -> Tuple[dict, jax.Array]:
+    """Named-layout twin of ``scenarios.evict_beyond_cap``: invalidate
+    live slots at or beyond the CURRENT caps (the scenario drive applies
+    it at every step boundary, mirroring the env's packed-layout
+    eviction)."""
+    r = q["run_valid"].shape[1]
+    w = q["wait_valid"].shape[1]
+    run_ok = jnp.arange(r)[None, :] < jnp.asarray(run_caps, jnp.int32)[:, None]
+    wait_ok = jnp.arange(w)[None, :] < jnp.asarray(wait_caps, jnp.int32)[:, None]
+    evicted = (jnp.sum((q["run_valid"] & ~run_ok).astype(jnp.float32))
+               + jnp.sum((q["wait_valid"] & ~wait_ok).astype(jnp.float32)))
+    q = dict(q)
+    q["run_valid"] = q["run_valid"] & run_ok
+    q["wait_valid"] = q["wait_valid"] & wait_ok
+    return q, evicted
+
+
+# ---------------------------------------------------------------------------
 # Layout converters: legacy named fields <-> packed SoA (repro.env.engine)
 # ---------------------------------------------------------------------------
 

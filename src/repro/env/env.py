@@ -26,6 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import scenarios
 from repro.env import engine, profiles, workload
 from repro.env.profiles import ExpertPool
 
@@ -64,6 +65,13 @@ class EnvConfig:
     # memory with `profiles.memory_caps` / `with_ragged_caps`.
     run_caps: Optional[Tuple[int, ...]] = None
     wait_caps: Optional[Tuple[int, ...]] = None
+    # named scenario from the repro.scenarios registry scripting
+    # time-varying conditions: arrival-rate events (flash crowds, diurnal
+    # curves, trace replay) and fleet events (expert failure/recovery,
+    # stragglers, memory claim/release shrinking the live caps).  None =
+    # stationary workload against an always-up fleet; the "always_up"
+    # scenario is byte-identical to None (tests/test_scenarios.py).
+    scenario: Optional[str] = None
 
 
 def make_env_pool(cfg: EnvConfig) -> ExpertPool:
@@ -160,6 +168,7 @@ def _new_request(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
 
 
 def reset(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
+    scenarios.for_cfg(cfg)  # unknown scenario names fail here, not in step
     k1, k2 = jax.random.split(key)
     state = {
         "key": k1,
@@ -170,13 +179,13 @@ def reset(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
         "pending": _new_request(cfg, pool, k2),
         "stats": {k: jnp.float32(0) for k in
                   ("phi", "lat", "score", "wait", "done", "viol",
-                   "dropped", "routed")},
+                   "dropped", "routed", "evicted")},
     }
     return state
 
 
 def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
-                   action: jax.Array) -> jax.Array:
+                   action: jax.Array, up=None) -> jax.Array:
     """Eq. 15/16 second term: estimated QoS loss among the chosen expert's
     running requests, using the predictors' view (pred_s, pred_d).
 
@@ -185,7 +194,15 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
     expert rows live under the sharded engine backends.  Ragged fleets
     need no capacity mask here: the engine_layout contract guarantees a
     beyond-cap slot is never valid, and every term below is gated on the
-    run-valid channel."""
+    run-valid channel.
+
+    Routing to a DOWN expert (scenario fleets; ``up`` is the current (N,)
+    availability mask, default = look it up from ``cfg.scenario``) is an
+    impact-penalized violation: every running request there freezes — the
+    estimator charges them ALL as would-violate — and the routed request
+    itself is doomed on top (its own pred_s joins the penalty)."""
+    if up is None:
+        up = scenarios.availability(cfg, state["clock"])
     q = state["queues"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
     t = state["clock"]
@@ -214,21 +231,33 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
         l_est = (elapsed + est_remaining + extra) / jnp.maximum(d_hat, 1.0)
     would_violate = valid & (l_est >= cfg.latency_L)
     penalty = jnp.sum(jnp.where(would_violate, engine.run_pred_s(q)[n], 0.0))
+    if up is not None:
+        doomed = (jnp.sum(jnp.where(valid, engine.run_pred_s(q)[n], 0.0))
+                  + state["pending"]["pred_s"][n])
+        penalty = jnp.where(up[n], penalty, doomed)
     return jnp.where(action > 0, penalty, 0.0)
 
 
-def _admit(cfg: EnvConfig, state: dict, action: jax.Array) -> Tuple[dict, jax.Array]:
-    """Push pending request into expert (action-1)'s waiting queue."""
+def _admit(cfg: EnvConfig, state: dict, action: jax.Array,
+           up=None, wait_caps=None) -> Tuple[dict, jax.Array]:
+    """Push pending request into expert (action-1)'s waiting queue.
+    ``up``/``wait_caps`` are the CURRENT scenario conditions (down experts
+    admit nothing — the push converts to a drop); without a scenario the
+    static ragged caps apply."""
     r = state["pending"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
-    _, wait_caps = queue_caps(cfg)
+    if wait_caps is None:
+        _, wait_caps = queue_caps(cfg)
+    gate = action > 0
+    if up is not None:
+        gate = gate & up[n]
     # packed layout: one int + one float scatter instead of 7 field writes;
     # on a ragged fleet the push is rejected once the expert's IN-CAP wait
     # slots are full, even though dead padded slots remain
     queues, pushed = engine.push_wait(
         state["queues"], n, p=r["p_len"], d_true=r["out_len"][n],
         score=r["score"][n], pred_s=r["pred_s"][n], pred_d=r["pred_d"][n],
-        t=state["clock"], gate=action > 0, wait_cap=wait_caps)
+        t=state["clock"], gate=gate, wait_cap=wait_caps)
     dropped = (action == 0) | ((action > 0) & ~pushed)
     state = dict(state)
     state["queues"] = queues
@@ -237,20 +266,38 @@ def _admit(cfg: EnvConfig, state: dict, action: jax.Array) -> Tuple[dict, jax.Ar
 
 def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
          action: jax.Array) -> Tuple[dict, jax.Array, dict]:
-    """One routing decision. Returns (state, reward, info)."""
-    penalty = impact_penalty(cfg, pool, state, action)
-    state, dropped = _admit(cfg, state, action)
+    """One routing decision. Returns (state, reward, info).
+
+    With ``cfg.scenario`` set, the compiled condition tables are sampled
+    once at the window start (``state["clock"]``) and applied for the
+    whole step: beyond-current-cap occupants are evicted first (memory
+    was claimed out from under them), admission and the advance run
+    against the current caps/availability, stragglers' k1/k2 are scaled,
+    and the next arrival is drawn at the scenario-modulated rate."""
+    st = scenarios.for_cfg(cfg)
+    run_caps, wait_caps = queue_caps(cfg)
+    up = k_scale = rate_mult = None
+    evicted = jnp.float32(0.0)
+    if st is not None:
+        cur = scenarios.at_time(st, state["clock"])
+        run_caps, wait_caps = cur["run_cap"], cur["wait_cap"]
+        up, k_scale, rate_mult = cur["up"], cur["k_scale"], cur["rate_mult"]
+        queues, evicted = scenarios.evict_beyond_cap(
+            state["queues"], run_caps, wait_caps)
+        state = {**state, "queues": queues}
+
+    penalty = impact_penalty(cfg, pool, state, action, up=up)
+    state, dropped = _admit(cfg, state, action, up=up, wait_caps=wait_caps)
 
     key, k_arr, k_req = jax.random.split(state["key"], 3)
     dt, wl_state = workload.next_arrival(cfg.workload, state["wl"],
-                                         state["clock"], k_arr)
+                                         state["clock"], k_arr, rate_mult)
     t_next = state["clock"] + dt
 
-    run_caps, wait_caps = queue_caps(cfg)
     queues, clocks, acc = engine.advance_all(
         pool, cfg.latency_L, state["queues"], state["expert_clock"], t_next,
         backend=cfg.engine_backend, admit_order=cfg.admit_order,
-        run_caps=run_caps, wait_caps=wait_caps)
+        run_caps=run_caps, wait_caps=wait_caps, up=up, k_scale=k_scale)
     acc = jax.tree.map(lambda x: jnp.sum(x), acc)  # sum over experts
 
     reward = acc["phi"] - penalty - cfg.drop_penalty * dropped
@@ -260,6 +307,7 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
         stats[k] = stats[k] + acc[k]
     stats["dropped"] = stats["dropped"] + dropped
     stats["routed"] = stats["routed"] + (action > 0).astype(jnp.float32)
+    stats["evicted"] = stats["evicted"] + evicted
 
     new_state = {
         "key": key,
@@ -289,4 +337,5 @@ def episode_metrics(state: dict) -> dict:
         "completed": s["done"],
         "dropped": s["dropped"],
         "routed": s["routed"],
+        "evicted": s["evicted"],
     }

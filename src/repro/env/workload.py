@@ -5,6 +5,14 @@
   modulation + a two-state (calm/burst) Markov intensity, giving the heavy
   bursts of Fig. 8.  Average rate is normalized to λ.
 
+Both kinds COMPOSE with the scenario subsystem: ``current_rate`` /
+``next_arrival`` accept an optional ``rate_mult`` — the scenario's
+compiled workload-event multiplier at the current clock
+(``scenarios.at_time(...)["rate_mult"]``) — applied on top of the
+process's own rate, so a flash crowd rides a realworld burst chain
+instead of bypassing it.  ``rate_mult=None`` skips the multiply entirely
+(byte-identical to the scenario-free process).
+
 All jittable; state is a small pytree.
 """
 from __future__ import annotations
@@ -32,9 +40,14 @@ def init_state() -> dict:
     return {"burst": jnp.zeros((), jnp.bool_)}
 
 
-def current_rate(cfg: WorkloadConfig, state: dict, t: jax.Array) -> jax.Array:
+def current_rate(cfg: WorkloadConfig, state: dict, t: jax.Array,
+                 rate_mult=None) -> jax.Array:
+    """Instantaneous arrival rate at clock ``t``; ``rate_mult`` is the
+    scenario's workload multiplier (None = no scenario, skip the multiply
+    so the path stays byte-identical)."""
     if cfg.kind == "poisson":
-        return jnp.asarray(cfg.rate, jnp.float32)
+        rate = jnp.asarray(cfg.rate, jnp.float32)
+        return rate if rate_mult is None else rate * rate_mult
     diurnal = 1.0 + cfg.diurnal_amp * jnp.sin(
         2.0 * jnp.pi * t / cfg.diurnal_period)
     burst = jnp.where(state["burst"], cfg.burst_rate_mult, 1.0)
@@ -43,18 +56,21 @@ def current_rate(cfg: WorkloadConfig, state: dict, t: jax.Array) -> jax.Array:
     # per ARRIVAL, so p_on is the stationary fraction of arrivals (not of
     # wall-clock) spent bursting; each burst arrival occupies 1/mult as
     # much time, so the divisor must be the TIME-weighted rate multiplier.
+    # A scenario rate_mult scales the normalized rate — its long-run mean
+    # is the spec's business, not this normalization's.
     p_on = cfg.burst_on_prob / (cfg.burst_on_prob + cfg.burst_off_prob)
     t_burst = p_on / cfg.burst_rate_mult
     time_frac = t_burst / (t_burst + (1.0 - p_on))
     norm = 1.0 + time_frac * (cfg.burst_rate_mult - 1.0)
-    return cfg.rate * diurnal * burst / norm
+    rate = cfg.rate * diurnal * burst / norm
+    return rate if rate_mult is None else rate * rate_mult
 
 
 def next_arrival(cfg: WorkloadConfig, state: dict, t: jax.Array,
-                 key: jax.Array) -> Tuple[jax.Array, dict]:
+                 key: jax.Array, rate_mult=None) -> Tuple[jax.Array, dict]:
     """Returns (dt to next arrival, new workload state)."""
     k1, k2 = jax.random.split(key)
-    rate = jnp.maximum(current_rate(cfg, state, t), 1e-3)
+    rate = jnp.maximum(current_rate(cfg, state, t, rate_mult), 1e-3)
     dt = jax.random.exponential(k1) / rate
     if cfg.kind == "poisson":
         return dt, state

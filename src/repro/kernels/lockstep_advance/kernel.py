@@ -19,12 +19,16 @@ TPU portability notes (vs the jnp body in ``engine.advance_shard``):
   * the per-expert accumulator dict becomes a dense (block_n, 6) float32
     tensor (channel order ``ops.ACC_KEYS``);
   * clocks ride as (N, 1) so every operand is >= 2-D;
-  * the per-expert pool scalars AND the ragged capacity vectors travel in
-    one dense (block_n, PAR_CH) float32 operand (``PAR_*`` channel order
-    below) — run_cap/wait_cap are small ints, exactly representable in
-    float32, and a uniform fleet (caps == packed widths) makes every
-    capacity mask all-True, reproducing the capacity-free kernel
-    bit-for-bit.
+  * the per-expert pool scalars, the ragged capacity vectors AND the
+    scenario availability mask travel in one dense (block_n, PAR_CH)
+    float32 operand (``PAR_*`` channel order below) — run_cap/wait_cap
+    are small ints and up is 0/1, exactly representable in float32, and
+    a uniform always-up fleet (caps == packed widths, up all-ones) makes
+    every mask all-True, reproducing the capacity-free scenario-free
+    kernel bit-for-bit.  A down expert (up == 0) admits nothing and
+    decodes nothing: its only permitted action is idle, matching the
+    engine's XLA body.  Straggler ``k_scale`` factors arrive pre-folded
+    into k1/k2 (``engine.pool_params``), so they need no channel.
 
 Off-TPU the kernel runs in interpret mode (see ``ops.lockstep_advance``,
 which also carries the ``use_pallas`` escape hatch and the ``ref.py``
@@ -52,9 +56,11 @@ INF = 1e30
 N_ACC = 6  # phi, lat, score, wait, done, viol  (ops.ACC_KEYS order)
 
 # channel order of the packed per-expert parameter operand (ops.py builds
-# it; caps are stored as float32 and re-cast to int32 in the kernel)
-PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP = range(6)
-PAR_CH = 6
+# it; caps are stored as float32 and re-cast to int32 in the kernel, the
+# availability mask as 0.0/1.0 and re-cast to bool)
+(PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
+ PAR_UP) = range(7)
+PAR_CH = 7
 
 
 def _first_index(mask: jax.Array, iota: jax.Array, size: int) -> jax.Array:
@@ -84,6 +90,7 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     cap, mpt = par[:, PAR_MEM_CAP], par[:, PAR_MPT]
     run_capv = par[:, PAR_RUN_CAP].astype(jnp.int32)       # (B,)
     wait_capv = par[:, PAR_WAIT_CAP].astype(jnp.int32)
+    upv = par[:, PAR_UP] > 0.5                             # (B,) availability
 
     bn, r_cap = run_i0.shape[0], run_i0.shape[1]
     w_cap = wait_i0.shape[1]
@@ -95,7 +102,7 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     # wait side: fields are loop-invariant, only the valid bit is carried
     wait_p0 = wait_i0[..., WI_P]
     wait_d_true0 = wait_i0[..., WI_D_TRUE]
-    w_sort_key = admit_sort_key(wait_f0, admit_order)
+    w_sort_key = admit_sort_key(wait_f0, admit_order, latency_L)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -126,12 +133,12 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
         head_sel = wait_iota == w_idx[:, None]                      # (B, W)
         head_p = _onehot_pick(head_sel, wait_p0)
         fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
-        can_admit = w_has & r_has_space & fits
+        can_admit = w_has & r_has_space & fits & upv
         r_has = jnp.any(validb, -1)
 
         adm = active & can_admit
-        dec = active & ~can_admit & r_has
-        idle = active & ~can_admit & ~r_has
+        dec = active & ~can_admit & r_has & upv
+        idle = active & ~can_admit & ~(r_has & upv)
 
         # --- decode: masked in-place over this iteration's decoding rows ---
         dec_rows = dec[:, None] & validb                   # (B, R)
@@ -201,8 +208,8 @@ def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
 
     run_i (N, R, CI) i32 | run_f (N, R, CF) f32 | wait_i (N, W, CI) i32 |
     wait_f (N, W, CF) f32 | par (N, PAR_CH) f32 [k1, k2, cap, mpt,
-    run_cap, wait_cap] | clocks (N, 1) f32 | t_next (1, 1) f32.  N must
-    divide by block_n.
+    run_cap, wait_cap, up] | clocks (N, 1) f32 | t_next (1, 1) f32.  N
+    must divide by block_n.
 
     Returns (run_i, run_f, wait_valid (N, W) i32, clocks (N, 1),
     acc (N, 6) f32 in ``ops.ACC_KEYS`` order).

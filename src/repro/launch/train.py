@@ -20,6 +20,13 @@ Router mode shards the DRL router's replay buffer over the expert mesh
 fleet (per-expert queue capacities from pool memory); with
 ``--obs-fmt segments`` the observation edge lists then scale with the
 fleet's total capacity instead of N * max(cap).
+
+``--scenario <name>`` trains against a scripted time-varying scenario
+from the ``repro.scenarios`` registry (flash crowds, expert failures,
+stragglers, memory claim/release) instead of a stationary workload:
+
+    PYTHONPATH=src python -m repro.launch.train --router --iters 200 \
+        --scenario flash_crowd
 """
 from __future__ import annotations
 
@@ -49,6 +56,12 @@ def train_router_main(args) -> None:
         env_cfg = env_lib.with_ragged_caps(env_cfg, pool)
         print(f"[train] ragged fleet: run_caps={env_cfg.run_caps} "
               f"wait_caps={env_cfg.wait_caps}")
+    if args.scenario:
+        from repro import scenarios
+        env_cfg = dataclasses.replace(env_cfg, scenario=args.scenario)
+        spec = scenarios.get(args.scenario)  # fail loudly on a bad name
+        print(f"[train] scenario {spec.name!r}: horizon={spec.horizon:g}s, "
+              f"{len(spec.events)} events")
     sac_cfg = sac_lib.SACConfig(
         n_actions=env_cfg.n_experts + 1,
         flat_dim=env_cfg.n_experts * 3,
@@ -79,6 +92,11 @@ def main() -> None:
     p.add_argument("--ragged-caps", action="store_true",
                    help="heterogeneous fleet: per-expert queue capacities "
                         "derived from pool memory (profiles.memory_caps)")
+    p.add_argument("--scenario", default="",
+                   help="named scripted scenario (repro.scenarios registry: "
+                        "flash_crowd, rolling_outage, memory_pressure, "
+                        "stress, ...) for time-varying workload/fleet "
+                        "conditions")
     p.add_argument("--iters", type=int, default=400)
     p.add_argument("--arch", default="qwen1.5-0.5b")
     p.add_argument("--steps", type=int, default=100)

@@ -1,0 +1,28 @@
+"""Scenario subsystem: scripted, time-varying workloads and fleets.
+
+The paper's core claim is *sustained* QoS under dynamic conditions; this
+package makes those conditions first-class and declarative:
+
+  * ``spec``     — event dataclass DSL + registry of named scenarios
+    (flash crowds, diurnal curves, trace replay; expert failure/recovery,
+    stragglers, memory claim/release);
+  * ``compile``  — lowers a spec to ``ScenarioTensors``: dense per-bucket
+    jit-safe tables with static shapes;
+  * ``runtime``  — clock→conditions lookup (``at_time``), cap-shrink
+    eviction on the packed queue layout, and the cached ``for_cfg``
+    entry point shared by env / features / routers.
+
+The engine itself stays scenario-agnostic: current availability masks and
+cap vectors simply ride the pool-params tree into the pure
+``advance_shard`` body (``engine.advance_all(..., up=, k_scale=,
+run_caps=, wait_caps=)``), so all three backends — xla, pallas,
+shard_map — inherit scenario semantics from one code path and stay
+bit-identical to the scenario-aware oracle
+(``engine_ref.advance_all_scenario``).
+"""
+from repro.scenarios.compile import ScenarioTensors, compile_spec  # noqa: F401
+from repro.scenarios.runtime import (at_time, availability, compiled,  # noqa: F401
+                                     evict_beyond_cap, for_cfg)
+from repro.scenarios.spec import (CapClaim, DiurnalRate, ExpertDown,  # noqa: F401
+                                  FlashCrowd, ScenarioSpec, Slowdown,
+                                  TraceReplay, get, names, register)

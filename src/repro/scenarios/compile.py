@@ -1,0 +1,126 @@
+"""Scenario compiler: lower a ``ScenarioSpec`` to jit-safe tables.
+
+``compile_spec`` discretizes the spec's horizon into ``T = ceil(horizon /
+dt)`` buckets and evaluates every event on the bucket grid with numpy —
+the result is a ``ScenarioTensors`` pytree of dense per-bucket tables:
+
+    rate_mult  (T,)    f32   product of all workload-event multipliers
+    up         (T, N)  bool  expert availability
+    run_cap    (T, N)  i32   live run slots   (<= the baseline caps)
+    wait_cap   (T, N)  i32   live wait slots  (<= the baseline caps)
+    k_scale    (T, N)  f32   k1/k2 straggler multiplier
+
+Bucket ``k`` covers ``[k·dt, (k+1)·dt)`` and holds the conditions sampled
+at its start; the runtime lookup is ``idx = clip(floor(t / dt), 0, T-1)``
+(``runtime.at_time``), so past the horizon the final bucket's conditions
+hold forever.  All shapes are static and the tables are plain arrays, so
+a lookup inside a jitted env step is one clipped gather — no python
+control flow ever depends on traced time.
+
+Capacity events are clipped to the BASELINE caps (``EnvConfig.run_caps``
+/ ``wait_caps``, or the packed widths): claims shrink, release restores,
+caps never exceed the baseline.  That keeps every static shape downstream
+— packed queue tensors, the ragged ``segments`` obs rows (Σ baseline
+caps) — exactly what the capacity-free/static-ragged system already
+allocates, with the time dynamics expressed purely through masks
+(``engine_layout.slot_valid`` on the current caps).
+
+Expert indices in fleet events are taken modulo ``n_experts`` so named
+scenarios run unchanged at any fleet size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios import spec as spec_lib
+
+
+class ScenarioTensors(NamedTuple):
+    """Compiled per-bucket condition tables (see module docstring).
+    ``dt`` rides as a (1,) float32 leaf so the tuple stays a uniform
+    array pytree; use ``float(st.dt[0])`` for the python value."""
+    dt: jax.Array         # (1,)  bucket width, seconds
+    rate_mult: jax.Array  # (T,)
+    up: jax.Array         # (T, N)
+    run_cap: jax.Array    # (T, N)
+    wait_cap: jax.Array   # (T, N)
+    k_scale: jax.Array    # (T, N)
+
+
+def _bucket_mask(times: np.ndarray, t0: float, t1: float) -> np.ndarray:
+    return (times >= t0) & (times < t1)
+
+
+def compile_spec(spec: spec_lib.ScenarioSpec, n_experts: int,
+                 run_width: int, wait_width: int,
+                 base_run_caps: Optional[Tuple[int, ...]] = None,
+                 base_wait_caps: Optional[Tuple[int, ...]] = None,
+                 ) -> ScenarioTensors:
+    """Lower ``spec`` to dense bucket tables for an N-expert fleet whose
+    packed widths are ``run_width``/``wait_width`` and whose baseline
+    per-expert caps are ``base_run_caps``/``base_wait_caps`` (None = the
+    packed widths, i.e. a uniform fleet)."""
+    T = int(np.ceil(spec.horizon / spec.dt))
+    times = np.arange(T, dtype=np.float64) * spec.dt  # bucket starts
+
+    base_rc = np.asarray(base_run_caps if base_run_caps is not None
+                         else (run_width,) * n_experts, np.int32)
+    base_wc = np.asarray(base_wait_caps if base_wait_caps is not None
+                         else (wait_width,) * n_experts, np.int32)
+    if base_rc.shape != (n_experts,) or base_wc.shape != (n_experts,):
+        raise ValueError(
+            f"baseline caps must be length-{n_experts}; got "
+            f"run={base_rc.shape}, wait={base_wc.shape}")
+
+    rate_mult = np.ones(T, np.float64)
+    up = np.ones((T, n_experts), bool)
+    run_cap = np.tile(base_rc, (T, 1))
+    wait_cap = np.tile(base_wc, (T, 1))
+    k_scale = np.ones((T, n_experts), np.float64)
+
+    for ev in spec.events:
+        if isinstance(ev, spec_lib.FlashCrowd):
+            rate_mult[_bucket_mask(times, ev.t0, ev.t1)] *= ev.mult
+        elif isinstance(ev, spec_lib.DiurnalRate):
+            rate_mult *= 1.0 + ev.amp * np.sin(
+                2.0 * np.pi * times / ev.period)
+        elif isinstance(ev, spec_lib.TraceReplay):
+            for i, m in enumerate(ev.mults):
+                rate_mult[_bucket_mask(times, ev.t0 + i * ev.dt,
+                                       ev.t0 + (i + 1) * ev.dt)] *= m
+        elif isinstance(ev, spec_lib.ExpertDown):
+            up[_bucket_mask(times, ev.t0, ev.t1), ev.expert % n_experts] = \
+                False
+        elif isinstance(ev, spec_lib.Slowdown):
+            k_scale[_bucket_mask(times, ev.t0, ev.t1),
+                    ev.expert % n_experts] *= ev.factor
+        elif isinstance(ev, spec_lib.CapClaim):
+            n = ev.expert % n_experts
+            m = _bucket_mask(times, ev.t0, ev.t1)
+            run_cap[m, n] = np.clip(ev.run_cap, 1, base_rc[n])
+            wait_cap[m, n] = np.clip(ev.wait_cap, 1, base_wc[n])
+        else:  # pragma: no cover — ScenarioSpec.__post_init__ rejects these
+            raise TypeError(f"unknown event {ev!r}")
+
+    if np.any(rate_mult <= 0.0):
+        raise ValueError(
+            f"scenario {spec.name!r}: compiled rate multiplier must stay "
+            f"positive (min {rate_mult.min():.3f}) — cap DiurnalRate.amp "
+            f"below 1 and TraceReplay mults above 0")
+
+    # The first compile for a config may happen while a jit/vmap trace is
+    # active (runtime.compiled is lru-cached from inside env.reset/step);
+    # force concrete arrays so the cache never captures tracers.
+    with jax.ensure_compile_time_eval():
+        return ScenarioTensors(
+            dt=jnp.asarray([spec.dt], jnp.float32),
+            rate_mult=jnp.asarray(rate_mult, jnp.float32),
+            up=jnp.asarray(up),
+            run_cap=jnp.asarray(run_cap, jnp.int32),
+            wait_cap=jnp.asarray(wait_cap, jnp.int32),
+            k_scale=jnp.asarray(k_scale, jnp.float32),
+        )

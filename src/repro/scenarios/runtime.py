@@ -1,0 +1,94 @@
+"""Scenario runtime: jit-safe lookups + queue eviction (runtime layer).
+
+``at_time`` turns a clock value into the current condition vectors with
+one clipped gather per table; ``evict_beyond_cap`` enforces a cap shrink
+on the packed queue layout (the engine itself only ever *masks* against
+the current caps — eviction is the one place a scenario mutates queue
+state, and it happens at the env step boundary before the advance, so
+the ``engine_layout`` dead-slot contract holds with the CURRENT caps
+throughout every advance window).
+
+``for_cfg`` is the cached compile entry point the env/features/routers
+layers share: keyed on the scenario name plus the env's static queue
+geometry, so every jitted step closes over one set of compiled tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.engine_layout import (RI_VALID, WI_VALID, run_valid,
+                                     slot_valid, wait_valid)
+from repro.scenarios import spec as spec_lib
+from repro.scenarios.compile import ScenarioTensors, compile_spec
+
+
+def at_time(st: ScenarioTensors, t: jax.Array) -> Dict[str, jax.Array]:
+    """Current conditions at clock ``t``: ``{"rate_mult" (), "up" (N,),
+    "run_cap" (N,), "wait_cap" (N,), "k_scale" (N,)}``.  Traced-time
+    safe: one clipped floor-divide index, rows gathered from the compiled
+    tables; past the horizon the last bucket holds."""
+    idx = jnp.clip((t / st.dt[0]).astype(jnp.int32), 0,
+                   st.rate_mult.shape[0] - 1)
+    return {"rate_mult": st.rate_mult[idx], "up": st.up[idx],
+            "run_cap": st.run_cap[idx], "wait_cap": st.wait_cap[idx],
+            "k_scale": st.k_scale[idx]}
+
+
+def evict_beyond_cap(queues: dict, run_cap: jax.Array, wait_cap: jax.Array,
+                     ) -> Tuple[dict, jax.Array]:
+    """Invalidate every live slot at or beyond the CURRENT per-expert caps
+    (memory was claimed out from under those requests) and return
+    ``(queues, n_evicted)``.  With caps at the packed widths the masks are
+    all-True and the queue values are returned unchanged — the always-up
+    scenario stays byte-identical to running without one."""
+    run_ok = slot_valid(run_cap, queues["run_i"].shape[1])    # (N, R)
+    wait_ok = slot_valid(wait_cap, queues["wait_i"].shape[1])  # (N, W)
+    rv, wv = run_valid(queues), wait_valid(queues)
+    evicted = (jnp.sum((rv & ~run_ok).astype(jnp.float32))
+               + jnp.sum((wv & ~wait_ok).astype(jnp.float32)))
+    queues = {
+        **queues,
+        "run_i": queues["run_i"].at[..., RI_VALID].set(
+            (rv & run_ok).astype(jnp.int32)),
+        "wait_i": queues["wait_i"].at[..., WI_VALID].set(
+            (wv & wait_ok).astype(jnp.int32)),
+    }
+    return queues, evicted
+
+
+@functools.lru_cache(maxsize=None)
+def compiled(name: str, n_experts: int, run_width: int, wait_width: int,
+             base_run_caps: Optional[Tuple[int, ...]] = None,
+             base_wait_caps: Optional[Tuple[int, ...]] = None,
+             ) -> ScenarioTensors:
+    """Registry lookup + compile, cached on the full static key so repeat
+    traces (vmapped envs, eval episodes) reuse one table set."""
+    return compile_spec(spec_lib.get(name), n_experts, run_width,
+                        wait_width, base_run_caps, base_wait_caps)
+
+
+def for_cfg(cfg) -> Optional[ScenarioTensors]:
+    """The compiled tables for an ``EnvConfig``-shaped object (anything
+    with ``scenario`` / ``n_experts`` / ``run_cap`` / ``wait_cap`` and
+    optional ragged ``run_caps``/``wait_caps``), or None when the config
+    scripts no scenario."""
+    name = getattr(cfg, "scenario", None)
+    if not name:
+        return None
+    return compiled(name, cfg.n_experts, cfg.run_cap, cfg.wait_cap,
+                    getattr(cfg, "run_caps", None),
+                    getattr(cfg, "wait_caps", None))
+
+
+def availability(cfg, t: jax.Array) -> Optional[jax.Array]:
+    """The (N,) up/down mask at clock ``t`` for availability-aware
+    policies (``routers.shortest_queue`` / ``quality_least_loaded``), or
+    None when the config scripts no scenario."""
+    st = for_cfg(cfg)
+    if st is None:
+        return None
+    return at_time(st, t)["up"]

@@ -162,7 +162,7 @@ def test_engines_complete_work(traces):
 
 
 # ---------------------------------------------------------------------------
-# QoS-weighted admission orders (admit_order="qos" / "qos_aged")
+# Non-fifo admission orders (admit_order="qos" / "qos_aged" / "edf")
 # ---------------------------------------------------------------------------
 
 
@@ -189,10 +189,10 @@ def test_qos_admit_order_pops_highest_pred_s(backend):
         assert int(jnp.sum(engine.wait_valid(q))) == 1  # other one still waits
 
 
-@pytest.mark.parametrize("admit_order", ("qos", "qos_aged"))
+@pytest.mark.parametrize("admit_order", ("qos", "qos_aged", "edf"))
 def test_qos_admit_order_backends_agree(admit_order):
-    """The qos/qos_aged admission orders have no seed oracle, so pin the
-    three backends to each other bit-for-bit on a short stream."""
+    """The qos/qos_aged/edf admission orders have no seed oracle, so pin
+    the three backends to each other bit-for-bit on a short stream."""
     pool = profiles.make_pool(N)
     stream = _arrival_stream(80, seed=3)
     ref = _drive_backend(pool, stream, "xla", admit_order=admit_order)
@@ -230,6 +230,31 @@ def test_qos_aged_admission_prevents_starvation(backend):
         assert bool(engine.run_valid(q)[0, 0])
         got = float(engine.run_pred_s(q)[0, 0])
         assert got == pytest.approx(want[order]), (order, got)
+
+
+@pytest.mark.parametrize("backend", ("xla", "pallas"))
+def test_edf_admission_pops_nearest_deadline(backend):
+    """admit_order="edf" must pop the waiter with the earliest predicted
+    deadline t_arrive + L * pred_d — a short-output waiter whose deadline
+    is imminent beats an older long-output one (fifo picks the older)."""
+    pool = profiles.make_pool(1)
+    want = {"fifo": 300.0, "edf": 10.0}
+    for order, expect in want.items():
+        q = engine.empty_queues(1, 1, 2)
+        # older, long output: deadline 0.0 + 0.03*300 = 9.0 s
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.5,
+                                pred_s=0.2, pred_d=300.0, t=0.0)
+        # fresher, short output: deadline 0.001 + 0.03*10 = 0.301 s
+        q, _ = engine.push_wait(q, jnp.int32(0), p=10, d_true=50, score=0.9,
+                                pred_s=0.9, pred_d=10.0, t=0.001)
+        t_next = pool.k1[0] * 10.0 * 0.5  # exactly one admission fits
+        q, _, _ = jax.jit(lambda q, c, t: engine.advance_all(
+            pool, LAT_L, q, c, t, backend=backend, admit_order=order))(
+                q, jnp.zeros((1,), jnp.float32), t_next)
+        assert bool(engine.run_valid(q)[0, 0])
+        got = float(engine.run_pred_d(q)[0, 0])
+        assert got == pytest.approx(expect), (order, got)
+        assert int(jnp.sum(engine.wait_valid(q))) == 1
 
 
 # ---------------------------------------------------------------------------

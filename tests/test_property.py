@@ -156,6 +156,111 @@ def test_ragged_caps_never_exceeded(seed, run_caps, wait_caps):
     assert not bool(bad)
 
 
+# Module-level jitted scenario driver (same sharing trick as _caps_driver:
+# availability masks, cap schedules and the stream are runtime arrays).
+_SCEN_N, _SCEN_R, _SCEN_W, _SCEN_STEPS = 3, 4, 3, 40
+
+
+def _scenario_driver():
+    from repro import scenarios
+    from repro.env import engine, profiles
+
+    if not hasattr(_scenario_driver, "_fn"):
+        pool = profiles.make_pool(_SCEN_N)
+
+        @jax.jit
+        def drive(up, run_caps_ab, wait_caps_ab, stream):
+            """`up` (N,) holds for the whole drive; caps switch from row 0
+            to row 1 of the (2, N) schedules halfway through (a mid-drive
+            claim/release), with eviction at every step boundary —
+            mirroring env.step's scenario path."""
+            half = _SCEN_STEPS // 2
+
+            def step(carry, x):
+                q, clocks, t, i = carry
+                rc = jnp.where(i < half, run_caps_ab[0], run_caps_ab[1])
+                wc = jnp.where(i < half, wait_caps_ab[0], wait_caps_ab[1])
+                q, _ = scenarios.evict_beyond_cap(q, rc, wc)
+                q, _ = engine.push_wait(
+                    q, x["expert"], p=x["p"], d_true=x["d"], score=0.5,
+                    pred_s=0.5, pred_d=x["d"].astype(jnp.float32), t=t,
+                    gate=up[x["expert"]], wait_cap=wc)
+                t_next = t + x["dt"]
+                q, clocks, _ = engine.advance_all(
+                    pool, 0.030, q, clocks, t_next,
+                    run_caps=rc, wait_caps=wc, up=up)
+                rv, wv = engine.run_valid(q), engine.wait_valid(q)
+                # invariant 1: nothing ever admitted to a down expert
+                # (run queues start empty, so any valid run slot on a
+                # down expert is an admission that should not have run)
+                down_admit = jnp.any(rv & ~up[:, None])
+                # invariant 2: occupancy never exceeds the CURRENT caps,
+                # and no slot at/beyond the current cap is valid
+                over = ((jnp.max(jnp.sum(rv, -1) - rc) > 0)
+                        | (jnp.max(jnp.sum(wv, -1) - wc) > 0)
+                        | jnp.any(rv & ~engine.slot_valid(rc, _SCEN_R))
+                        | jnp.any(wv & ~engine.slot_valid(wc, _SCEN_W)))
+                return (q, clocks, t_next, i + 1), (down_admit, over)
+
+            init = (engine.empty_queues(_SCEN_N, _SCEN_R, _SCEN_W),
+                    jnp.zeros((_SCEN_N,), jnp.float32), jnp.float32(0.0),
+                    jnp.int32(0))
+            _, (down_admit, over) = jax.lax.scan(step, init, stream)
+            return jnp.any(down_admit), jnp.any(over)
+
+        _scenario_driver._fn = drive
+    return _scenario_driver._fn
+
+
+def _scen_stream(seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    return {
+        "dt": jax.random.exponential(ks[0], (_SCEN_STEPS,)) / 5.0,
+        "expert": jax.random.randint(ks[1], (_SCEN_STEPS,), 0, _SCEN_N),
+        "p": jax.random.randint(ks[2], (_SCEN_STEPS,), 16, 512),
+        "d": jax.random.randint(ks[3], (_SCEN_STEPS,), 8, 300),
+    }
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    up=st.tuples(*[st.booleans()] * _SCEN_N),
+)
+def test_scenario_down_expert_never_admits(seed, up):
+    """Scenario availability contract: a down expert never admits — its
+    run queue stays empty for the whole drive no matter the arrival
+    pattern (its waiters freeze; engine.advance_shard gates the admit
+    action on `up`)."""
+    down_admit, _ = _scenario_driver()(
+        jnp.asarray(up, jnp.bool_),
+        jnp.full((2, _SCEN_N), _SCEN_R, jnp.int32),
+        jnp.full((2, _SCEN_N), _SCEN_W, jnp.int32),
+        _scen_stream(seed))
+    assert not bool(down_admit)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    caps_a=st.tuples(*[st.integers(1, _SCEN_R)] * _SCEN_N),
+    caps_b=st.tuples(*[st.integers(1, _SCEN_R)] * _SCEN_N),
+    wcaps_a=st.tuples(*[st.integers(1, _SCEN_W)] * _SCEN_N),
+    wcaps_b=st.tuples(*[st.integers(1, _SCEN_W)] * _SCEN_N),
+)
+def test_scenario_occupancy_never_exceeds_current_cap(seed, caps_a, caps_b,
+                                                      wcaps_a, wcaps_b):
+    """Dynamic-capacity contract: with caps switching mid-drive (memory
+    claim/release) and step-boundary eviction, occupancy never exceeds
+    the CURRENT cap and no slot at/beyond the current cap is ever
+    valid."""
+    _, over = _scenario_driver()(
+        jnp.ones((_SCEN_N,), jnp.bool_),
+        jnp.asarray([caps_a, caps_b], jnp.int32),
+        jnp.asarray([wcaps_a, wcaps_b], jnp.int32),
+        _scen_stream(seed))
+    assert not bool(over)
+
+
 @given(
     lam=st.floats(0.5, 20.0),
     kind=st.sampled_from(["poisson", "realworld"]),
@@ -174,13 +279,14 @@ def test_arrivals_positive(lam, kind, seed):
 def test_han_expert_permutation_equivariance(perm_seed):
     """Permuting expert order must permute expert embeddings and leave the
     arrived-request embedding unchanged (graph symmetry of the HAN)."""
-    from repro.core import han as han_lib
+    from repro.core import features, han as han_lib
     rng = np.random.default_rng(perm_seed)
     N, R, W = 4, 3, 2
     key = jax.random.PRNGKey(0)
     params = han_lib.init_params(key)
     obs = {
-        "expert": jax.random.normal(jax.random.fold_in(key, 1), (N, 7)),
+        "expert": jax.random.normal(jax.random.fold_in(key, 1),
+                                    (N, features.EXP_FEATS)),
         "run": jax.random.normal(jax.random.fold_in(key, 2), (N, R, 6)),
         "wait": jax.random.normal(jax.random.fold_in(key, 3), (N, W, 6)),
         "run_mask": jax.random.bernoulli(jax.random.fold_in(key, 4), 0.6, (N, R)),

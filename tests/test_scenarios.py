@@ -1,0 +1,415 @@
+"""Scenario subsystem: compile correctness, engine bit-identity against
+the scenario-aware oracle, always-up byte-identity, and the env-level
+dynamic-fleet semantics (down-expert routing, eviction conservation,
+availability-aware heuristics, obs channels)."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import features, routers
+from repro.env import engine, engine_ref, env as env_lib, profiles
+
+N, R, W = 6, 4, 4
+STEPS = 300
+LAT_L = 0.030
+BACKENDS = ("xla", "pallas", "shard_map")
+
+# The acceptance-test script (ISSUE 5): a flash crowd, one expert
+# failure AND recovery, a mid-episode cap shrink (with eviction), and a
+# straggler — timed so a 300-step λ=5 drive crosses every event.
+TEST_SPEC = scenarios.ScenarioSpec(
+    name="_test_stress", horizon=60.0, dt=0.5,
+    events=(scenarios.FlashCrowd(t0=5.0, t1=12.0, mult=3.0),
+            scenarios.ExpertDown(expert=1, t0=8.0, t1=18.0),
+            scenarios.CapClaim(expert=0, t0=10.0, t1=45.0,
+                               run_cap=1, wait_cap=2),
+            scenarios.Slowdown(expert=4, t0=3.0, t1=40.0, factor=2.5)))
+
+
+def _register_once(spec):
+    try:
+        return scenarios.get(spec.name)
+    except KeyError:
+        return scenarios.register(spec)
+
+
+def _arrival_stream(steps: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 7)
+    return {
+        "dt": jax.random.exponential(ks[0], (steps,)) / 5.0,
+        "expert": jax.random.randint(ks[1], (steps,), 0, N),
+        "p": jax.random.randint(ks[2], (steps,), 16, 512),
+        "d_true": jax.random.randint(ks[3], (steps,), 8, 300),
+        "score": jax.random.uniform(ks[4], (steps,), minval=0.2, maxval=0.95),
+        "pred_s": jax.random.uniform(ks[5], (steps,), minval=0.2, maxval=0.95),
+        "pred_d": jax.random.uniform(ks[6], (steps,), minval=8.0,
+                                     maxval=300.0),
+    }
+
+
+def _admit_named(q, n, req, t, wait_caps, gate):
+    """Named-layout push (mirrors env._admit: gated on availability and
+    the CURRENT wait caps)."""
+    w = q["wait_valid"].shape[1]
+    slot_free = (~q["wait_valid"][n]) & (jnp.arange(w) < wait_caps[n])
+    do = jnp.any(slot_free) & gate
+    slot = jnp.argmax(slot_free)
+    set_at = lambda arr, val: arr.at[n, slot].set(
+        jnp.where(do, val, arr[n, slot]))
+    q = dict(q)
+    q["wait_valid"] = set_at(q["wait_valid"], do)
+    q["wait_p"] = set_at(q["wait_p"], req["p"])
+    q["wait_d_true"] = set_at(q["wait_d_true"], req["d_true"])
+    q["wait_score"] = set_at(q["wait_score"], req["score"])
+    q["wait_pred_s"] = set_at(q["wait_pred_s"], req["pred_s"])
+    q["wait_pred_d"] = set_at(q["wait_pred_d"], req["pred_d"])
+    q["wait_t_arrive"] = set_at(q["wait_t_arrive"], t)
+    return q
+
+
+def _drive_scenario(pool, stream, st, backend=None):
+    """Drive the arrival stream through (lookup -> evict -> gated admit ->
+    advance) with per-step scenario conditions.  ``backend=None`` runs the
+    named-layout oracle (`engine_ref.advance_all_scenario`); otherwise the
+    packed engine on the given backend.  Returns (final queues, clocks,
+    clock trace, acc trace, total evicted)."""
+    oracle = backend is None
+
+    def step(carry, x):
+        q, clocks, t, ev_total = carry
+        cur = scenarios.at_time(st, t)
+        gate = cur["up"][x["expert"]]
+        req = {k: x[k] for k in ("p", "d_true", "score", "pred_s", "pred_d")}
+        if oracle:
+            q, ev = engine_ref.evict_beyond_cap_named(
+                q, cur["run_cap"], cur["wait_cap"])
+            q = _admit_named(q, x["expert"], req, t, cur["wait_cap"], gate)
+        else:
+            q, ev = scenarios.evict_beyond_cap(
+                q, cur["run_cap"], cur["wait_cap"])
+            q, _ = engine.push_wait(q, x["expert"], p=req["p"],
+                                    d_true=req["d_true"], score=req["score"],
+                                    pred_s=req["pred_s"],
+                                    pred_d=req["pred_d"], t=t, gate=gate,
+                                    wait_cap=cur["wait_cap"])
+        t_next = t + x["dt"] / cur["rate_mult"]  # scenario-modulated rate
+        if oracle:
+            q, clocks, acc = engine_ref.advance_all_scenario(
+                pool, LAT_L, q, clocks, t_next, cur["run_cap"],
+                cur["wait_cap"], cur["up"], cur["k_scale"])
+        else:
+            q, clocks, acc = engine.advance_all(
+                pool, LAT_L, q, clocks, t_next, backend=backend,
+                run_caps=cur["run_cap"], wait_caps=cur["wait_cap"],
+                up=cur["up"], k_scale=cur["k_scale"])
+        return (q, clocks, t_next, ev_total + ev), (clocks, acc)
+
+    empty = engine_ref.empty_queues if oracle else engine.empty_queues
+    init = (empty(N, R, W), jnp.zeros((N,), jnp.float32), jnp.float32(0.0),
+            jnp.float32(0.0))
+    (q, clocks, t_end, evicted), (clock_trace, acc_trace) = jax.jit(
+        lambda: jax.lax.scan(step, init, stream))()
+    return q, clocks, clock_trace, acc_trace, evicted, t_end
+
+
+@pytest.fixture(scope="module")
+def scenario_traces():
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(STEPS)
+    st = scenarios.compile_spec(TEST_SPEC, N, R, W)
+    out = {"ref": _drive_scenario(pool, stream, st)}
+    for backend in BACKENDS:
+        out[backend] = _drive_scenario(pool, stream, st, backend)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compile layer
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_named_scenarios():
+    names = scenarios.names()
+    assert len([n for n in names if n != "always_up"]) >= 3
+    for name in names:
+        st = scenarios.compiled(name, N, R, W)
+        T = st.rate_mult.shape[0]
+        assert st.up.shape == (T, N)
+        assert st.run_cap.shape == (T, N)
+        # caps never exceed the baseline (static shapes downstream)
+        assert int(jnp.max(st.run_cap)) <= R
+        assert int(jnp.max(st.wait_cap)) <= W
+        assert int(jnp.min(st.run_cap)) >= 1
+        assert float(jnp.min(st.rate_mult)) > 0.0
+    with pytest.raises(KeyError):
+        scenarios.get("no_such_scenario")
+
+
+def test_compile_stress_covers_all_event_kinds():
+    st = scenarios.compiled("stress", N, R, W)
+    assert float(jnp.max(st.rate_mult)) > 1.0      # flash crowd
+    assert float(jnp.min(st.rate_mult)) < 1.0      # trace replay dip
+    assert bool(jnp.any(~st.up))                   # failure window
+    assert bool(jnp.any(st.run_cap < R))           # memory claim
+    assert float(jnp.max(st.k_scale)) > 1.0        # straggler
+    # conditions recover by the end of the horizon
+    assert bool(jnp.all(st.up[-1]))
+    assert bool(jnp.all(st.run_cap[-1] == R))
+
+
+def test_at_time_buckets_and_clamp():
+    st = scenarios.compile_spec(TEST_SPEC, N, R, W)
+    down = scenarios.at_time(st, jnp.float32(10.0))
+    assert not bool(down["up"][1])
+    assert int(down["run_cap"][0]) == 1            # claim active
+    assert float(down["rate_mult"]) == pytest.approx(3.0)
+    late = scenarios.at_time(st, jnp.float32(1e6))  # clamps to last bucket
+    assert bool(jnp.all(late["up"]))
+    assert float(late["rate_mult"]) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scenario_backends_match_oracle(scenario_traces, backend):
+    """All three backends must reproduce the scenario-aware oracle
+    (`engine_ref.advance_all_scenario`) exactly over 300 steps crossing a
+    flash crowd, an expert failure+recovery and a mid-episode cap shrink:
+    clocks, accumulators, eviction totals and final queue contents."""
+    (ref_q, ref_clocks, ref_trace, ref_acc, ref_ev, _) = \
+        scenario_traces["ref"]
+    (new_q, new_clocks, new_trace, new_acc, new_ev, _) = \
+        scenario_traces[backend]
+    np.testing.assert_allclose(np.asarray(ref_trace), np.asarray(new_trace),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref_clocks), np.asarray(new_clocks),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ref_ev), np.asarray(new_ev))
+    for k in ref_acc:
+        np.testing.assert_allclose(
+            np.asarray(ref_acc[k]), np.asarray(new_acc[k]),
+            rtol=0, atol=1e-6, err_msg=f"acc[{k}] diverged")
+    np.testing.assert_array_equal(np.asarray(ref_acc["done"]),
+                                  np.asarray(new_acc["done"]))
+    unpacked = engine_ref.unpack_queues(new_q)
+    np.testing.assert_array_equal(np.asarray(ref_q["run_valid"]),
+                                  np.asarray(unpacked["run_valid"]))
+    np.testing.assert_array_equal(np.asarray(ref_q["wait_valid"]),
+                                  np.asarray(unpacked["wait_valid"]))
+    rv = np.asarray(ref_q["run_valid"])
+    for k in ("run_p", "run_d_true", "run_d_cur", "run_score",
+              "run_t_arrive", "run_t_admit"):
+        np.testing.assert_allclose(
+            np.where(rv, np.asarray(ref_q[k]), 0),
+            np.where(rv, np.asarray(unpacked[k]), 0),
+            rtol=0, atol=1e-6, err_msg=f"{k} diverged on valid slots")
+
+
+def test_scenario_drive_is_not_vacuous(scenario_traces):
+    """The 300-step drive must actually cross every scripted event: work
+    completes, slots get evicted at the cap shrink, and the clock passes
+    the failed expert's recovery time."""
+    (_, _, _, acc, evicted, t_end) = scenario_traces["xla"]
+    assert float(jnp.sum(acc["done"])) > 50.0
+    assert float(evicted) > 0.0, "cap shrink never evicted anything"
+    assert float(t_end) > 18.0, "drive ended before the failure recovered"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_always_up_engine_byte_identical(backend):
+    """up=ones + k_scale=ones + caps=widths must be BYTE-identical to the
+    scenario-free engine on every backend."""
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(120, seed=7)
+
+    def drive(scenario: bool):
+        def step(carry, x):
+            q, clocks, t = carry
+            q, _ = engine.push_wait(
+                q, x["expert"], p=x["p"], d_true=x["d_true"],
+                score=x["score"], pred_s=x["pred_s"], pred_d=x["pred_d"],
+                t=t)
+            t_next = t + x["dt"]
+            kw = dict(run_caps=jnp.full((N,), R, jnp.int32),
+                      wait_caps=jnp.full((N,), W, jnp.int32),
+                      up=jnp.ones((N,), jnp.bool_),
+                      k_scale=jnp.ones((N,), jnp.float32)) if scenario else {}
+            q, clocks, acc = engine.advance_all(
+                pool, LAT_L, q, clocks, t_next, backend=backend, **kw)
+            return (q, clocks, t_next), (clocks, acc)
+
+        init = (engine.empty_queues(N, R, W), jnp.zeros((N,), jnp.float32),
+                jnp.float32(0.0))
+        return jax.jit(lambda: jax.lax.scan(step, init, stream))()
+
+    base, cond = drive(False), drive(True)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(cond)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Env-level semantics
+# ---------------------------------------------------------------------------
+
+# Down-from-the-start scenario for deterministic env tests: expert 0 never
+# up, expert 3's caps claimed from t=0.
+_register_once(scenarios.ScenarioSpec(
+    name="_test_down_now", horizon=30.0,
+    events=(scenarios.ExpertDown(expert=0, t0=0.0, t1=1e9),
+            scenarios.CapClaim(expert=3, t0=0.0, t1=1e9,
+                               run_cap=1, wait_cap=1))))
+
+
+@pytest.fixture(scope="module")
+def down_now():
+    cfg = env_lib.EnvConfig(scenario="_test_down_now")
+    pool = env_lib.make_env_pool(cfg)
+    return cfg, pool
+
+
+def test_env_always_up_byte_identical(down_now):
+    """The registered always_up scenario through the FULL env step (evict
+    + rate multiply + scenario-advance) is byte-identical to scenario-free
+    stepping."""
+    cfg0 = env_lib.EnvConfig()
+    cfg1 = dataclasses.replace(cfg0, scenario="always_up")
+    pool = env_lib.make_env_pool(cfg0)
+
+    def rollout(cfg):
+        state = env_lib.reset(cfg, pool, jax.random.PRNGKey(0))
+
+        def body(st, i):
+            st, r, _ = env_lib.step(cfg, pool, st, (i % cfg.n_experts) + 1)
+            return st, r
+
+        return jax.jit(
+            lambda s: jax.lax.scan(body, s, jnp.arange(150)))(state)
+
+    s0, r0 = rollout(cfg0)
+    s1, r1 = rollout(cfg1)
+    for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(s1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_routing_to_down_expert_drops_and_penalizes(down_now):
+    """Routing to a down expert admits nothing (the request converts to a
+    drop) and pays the doomed-push impact penalty (>= the request's own
+    pred_s there)."""
+    cfg, pool = down_now
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(1))
+    pred_s0 = float(state["pending"]["pred_s"][0])
+    state2, _, info = env_lib.step(cfg, pool, state, jnp.int32(1))
+    assert int(jnp.sum(engine.run_valid(state2["queues"])[0])) == 0
+    assert int(jnp.sum(engine.wait_valid(state2["queues"])[0])) == 0
+    assert float(state2["stats"]["dropped"]) == 1.0
+    assert float(info["penalty"]) >= pred_s0 - 1e-6
+    # an UP expert takes the same request without the doomed penalty
+    state3, _, info3 = env_lib.step(cfg, pool, state, jnp.int32(2))
+    assert float(state3["stats"]["dropped"]) == 0.0
+    assert float(info3["penalty"]) == 0.0  # empty queue, nothing to impact
+
+
+def test_request_conservation_with_eviction(down_now):
+    """With a scenario, the conservation law gains the eviction term:
+    done + in_system + dropped + evicted == arrivals."""
+    cfg = env_lib.EnvConfig(scenario="stress")
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(2))
+
+    def body(st, i):
+        st, _, _ = env_lib.step(cfg, pool, st, (i % cfg.n_experts) + 1)
+        return st, ()
+
+    n = 600
+    state, _ = jax.jit(lambda s: jax.lax.scan(body, s, jnp.arange(n)))(state)
+    s = state["stats"]
+    q = state["queues"]
+    in_system = (int(jnp.sum(engine.run_valid(q)))
+                 + int(jnp.sum(engine.wait_valid(q))))
+    assert (int(s["done"]) + in_system + int(s["dropped"])
+            + int(s["evicted"])) == n
+    assert float(state["clock"]) > 40.0  # crossed the cap-claim window
+
+
+def test_availability_aware_heuristics_avoid_down_expert(down_now):
+    """Scenario-aware SQF/QLL must never pick the down expert, and must
+    drop when the whole fleet is down."""
+    cfg, pool = down_now
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(3))
+    obs = features.build_obs(cfg, pool, state)
+    key = jax.random.PRNGKey(0)
+    for pol in (routers.shortest_queue(cfg.n_experts, env_cfg=cfg),
+                routers.quality_least_loaded(env_cfg=cfg)):
+        a, _ = pol.act(pol.init_state(key), state, obs, key)
+        assert int(a) != 1, f"{pol.name} routed to the down expert"
+        assert int(a) != 0, f"{pol.name} dropped with 5 experts up"
+    # availability-blind variants can still pick it (the contrast)
+    _register_once(scenarios.ScenarioSpec(
+        name="_test_all_down", horizon=10.0,
+        events=tuple(scenarios.ExpertDown(expert=i, t0=0.0, t1=1e9)
+                     for i in range(N))))
+    cfg_all = env_lib.EnvConfig(scenario="_test_all_down")
+    state_all = env_lib.reset(cfg_all, pool, jax.random.PRNGKey(4))
+    obs_all = features.build_obs(cfg_all, pool, state_all)
+    for pol in (routers.shortest_queue(cfg_all.n_experts, env_cfg=cfg_all),
+                routers.quality_least_loaded(env_cfg=cfg_all)):
+        a, _ = pol.act(pol.init_state(key), state_all, obs_all, key)
+        assert int(a) == 0, f"{pol.name} routed into a fully-down fleet"
+
+
+def test_obs_scenario_channels(down_now):
+    """The expert node's (up, cap-fraction) channels must reflect the
+    scripted conditions in both obs layouts."""
+    cfg, pool = down_now
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(5))
+    obs = features.build_obs(cfg, pool, state)
+    up_ch = np.asarray(obs["expert"][:, 7])
+    cap_ch = np.asarray(obs["expert"][:, 8])
+    assert up_ch[0] == 0.0 and np.all(up_ch[1:] == 1.0)
+    # CapClaim leaves 1+1 of the env's packed run_cap+wait_cap slots
+    assert cap_ch[3] == pytest.approx(2.0 / (cfg.run_cap + cfg.wait_cap))
+    assert np.all(np.delete(cap_ch, 3) == 1.0)
+    seg = features.build_obs(cfg, pool, state, fmt="segments")
+    np.testing.assert_array_equal(np.asarray(seg["expert"]),
+                                  np.asarray(obs["expert"]))
+    # scenario-free obs carry all-ones in both channels
+    cfg0 = env_lib.EnvConfig()
+    obs0 = features.build_obs(cfg0, pool,
+                              env_lib.reset(cfg0, pool, jax.random.PRNGKey(5)))
+    assert np.all(np.asarray(obs0["expert"][:, 7:]) == 1.0)
+
+
+def test_stale_router_checkpoint_detected():
+    """EXP_FEATS grew 7->9 with the scenario obs channels; checkpoint
+    loaders must detect a pre-scenario router instead of crashing with a
+    shape error mid-eval."""
+    from repro.core import han as han_lib, io
+    fresh = {"han": han_lib.init_params(jax.random.PRNGKey(0))}
+    assert io.router_ckpt_compatible(fresh)
+    stale = {"han": {"proj_expert": jnp.zeros((7, 64), jnp.float32)}}
+    assert not io.router_ckpt_compatible(stale)
+    assert io.router_ckpt_compatible({"actor": []})  # flat baseline
+
+
+def test_scenario_eval_end_to_end():
+    """Every registered (non-test) scenario evaluates end to end through
+    training.evaluate with an availability-aware policy."""
+    from repro.core import training
+    for name in ("flash_crowd", "rolling_outage", "memory_pressure",
+                 "stress"):
+        cfg = env_lib.EnvConfig(scenario=name)
+        pool = env_lib.make_env_pool(cfg)
+        pol = routers.quality_least_loaded(env_cfg=cfg)
+        m = training.evaluate(cfg, pool, pol, n_steps=300, n_envs=1)
+        assert m["completed"] > 0, name
+        assert np.isfinite(m["avg_qos"]), name

@@ -87,7 +87,8 @@ def test_heterogeneous_caps_end_to_end(setup):
 
 def test_examples_run_heterogeneous_fleet():
     """Smoke: both examples run a heterogeneous-caps pool end to end with
-    tiny budgets (the ISSUE-4 examples contract)."""
+    tiny budgets (the ISSUE-4 examples contract), plus the scripted
+    flash-crowd scenario phase (the ISSUE-5 demo contract)."""
     import os
     import sys
 
@@ -99,8 +100,24 @@ def test_examples_run_heterogeneous_fleet():
         quickstart.main(["--steps", "2", "--route-steps", "60"])
         edge_routing_demo.main(["--steps", "60", "--ragged-caps",
                                 "--quick-iters", "1"])
+        edge_routing_demo.main(["--steps", "60", "--scenario",
+                                "flash_crowd", "--quick-iters", "1"])
     finally:
         sys.path.remove(ex_dir)
+
+
+def test_launch_train_router_on_scenarios():
+    """launch.train --router --scenario <name> end to end (tiny budgets)
+    for three registry scenarios — the ISSUE-5 acceptance criterion."""
+    import argparse
+
+    from repro.launch import train as train_launch
+
+    for name in ("flash_crowd", "rolling_outage", "memory_pressure"):
+        args = argparse.Namespace(
+            router=True, router_mesh=False, obs_fmt="padded",
+            ragged_caps=False, scenario=name, iters=2)
+        train_launch.train_router_main(args)
 
 
 def test_serving_engine_end_to_end():

@@ -60,3 +60,35 @@ def test_realworld_burst_raises_rate():
     calm = float(workload.current_rate(cfg, {"burst": jnp.bool_(False)}, t))
     burst = float(workload.current_rate(cfg, {"burst": jnp.bool_(True)}, t))
     assert burst == pytest.approx(calm * cfg.burst_rate_mult, rel=1e-5)
+
+
+def test_scenario_rate_mult_composes_with_both_kinds():
+    """The scenario rate multiplier scales the process's OWN rate (burst
+    chain and diurnal modulation included) instead of bypassing it, and
+    rate_mult=None is exactly the unmodulated rate."""
+    t = jnp.float32(137.0)
+    for kind in ("poisson", "realworld"):
+        cfg = WorkloadConfig(kind=kind, rate=5.0)
+        for burst in (False, True):
+            state = {"burst": jnp.bool_(burst)}
+            base = float(workload.current_rate(cfg, state, t))
+            scaled = float(workload.current_rate(
+                cfg, state, t, rate_mult=jnp.float32(3.0)))
+            assert scaled == pytest.approx(3.0 * base, rel=1e-6), (kind, burst)
+            none = float(workload.current_rate(cfg, state, t,
+                                               rate_mult=None))
+            assert none == base
+
+
+def test_scenario_rate_mult_shrinks_interarrivals():
+    """A flash-crowd multiplier must shrink mean inter-arrival times by
+    ~the same factor (next_arrival consumes the scenario channel)."""
+    cfg = WorkloadConfig(kind="poisson", rate=5.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    t = jnp.float32(0.0)
+    state = workload.init_state()
+    dt = lambda mult: jax.jit(jax.vmap(
+        lambda k: workload.next_arrival(cfg, state, t, k, mult)[0]))
+    base = float(jnp.mean(dt(None)(keys)))
+    crowd = float(jnp.mean(dt(jnp.float32(4.0))(keys)))
+    assert base / crowd == pytest.approx(4.0, rel=0.05)
