@@ -1,0 +1,120 @@
+"""Fault sweep — failure rate (MTBF) x failover mode.
+
+The robustness claim behind ``repro.env.failover``: under expert
+failures, draining stranded requests into the retry buffer and
+re-admitting them to healthy experts should beat letting them freeze
+through the outage (they complete late or get evicted, dragging QoS and
+the violation rate down with them).  This sweep quantifies that.
+
+Rows are ``faults_mtbf<sec>/<mode>`` where the scenario scripts rotating
+``ExpertDown`` outages with a mean time between failures of ``<sec>``
+seconds (smaller = harsher), and ``mode`` is one of
+
+  * ``none``  — failover disabled (the PR 5 lifecycle: stranded work
+    freezes until recovery or eviction);
+  * ``fo``    — retry/backoff failover (``FailoverConfig()`` defaults);
+  * ``fo+shed`` — failover plus overload shedding (occupancy watermark
+    arms an admission floor on predicted score).
+
+Every mode runs the same availability-aware QLL heuristic over the same
+scripted outages, so the derived deltas isolate the lifecycle itself.
+``derived`` carries the usual QoS metrics plus the failover accounting
+(``shed``/``retry``/``redis``) and ``sps`` (env steps per second — the
+failover path costs a drain+readmit per step, which the perf gate keeps
+honest).  RL rows follow the tier-1 convention: ``REPRO_BENCH_RL=0``
+(CI) keeps the suite heuristics-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks import common
+from repro import scenarios
+from repro.core import routers
+from repro.env import env as env_lib
+from repro.env.failover import FailoverConfig
+
+# MTBF (s) -> rotating outage script: a new failure every MTBF seconds,
+# each outage lasting a fixed ``_OUTAGE`` seconds (at harsh MTBFs the
+# outages overlap, so several experts are down at once).  The outage
+# length is held constant across the sweep because it, not the failure
+# rate, selects the failure regime: a drained run-side request restarts
+# decode from scratch on the new expert, so failover pays off when
+# freezing through the outage would cost MORE than the restart — long
+# outages (deadline-blowing freezes) are exactly failover's regime,
+# while for very short blips freeze-and-resume can win.  Spec horizons
+# match the other scenario benches (120 s).
+MTBFS = (60.0, 30.0, 15.0)
+_OUTAGE = 25.0
+_HORIZON = 120.0
+
+
+def _mtbf_name(mtbf: float) -> str:
+    return f"mtbf_{mtbf:g}"
+
+
+def _register_mtbf_scenarios() -> None:
+    """Idempotently register one rotating-outage scenario per MTBF
+    (expert indices rotate modulo the fleet size at compile time, so the
+    hole moves around the fleet)."""
+    for mtbf in MTBFS:
+        name = _mtbf_name(mtbf)
+        if name in scenarios.names():
+            continue
+        events = []
+        i = 0
+        t0 = 10.0
+        while t0 + 1.0 < _HORIZON:
+            events.append(scenarios.ExpertDown(
+                expert=i, t0=t0, t1=min(t0 + _OUTAGE, _HORIZON)))
+            i += 1
+            t0 += mtbf
+        scenarios.register(scenarios.ScenarioSpec(
+            name=name, horizon=_HORIZON, events=tuple(events)))
+
+
+MODES = (
+    ("none", None),
+    ("fo", FailoverConfig()),
+    ("fo+shed", FailoverConfig(shed_watermark=0.85)),
+)
+
+
+def _fmt(m) -> str:
+    s = common.fmt_metrics(m) + f";evict={m['evicted']:.0f}"
+    if "shed" in m:
+        s += (f";shed={m['shed']:.0f};retry={m['retried']:.0f};"
+              f"redis={m['redispatched']:.0f}")
+    return s
+
+
+def run(n_steps: int = 800) -> None:
+    include_rl = os.environ.get("REPRO_BENCH_RL", "1") != "0"
+    _register_mtbf_scenarios()
+    from repro.env.workload import WorkloadConfig
+    for mtbf in MTBFS:
+        # λ=8 keeps queues non-empty at failure time — with the default
+        # λ=5 the fleet drains between arrivals and an outage strands
+        # almost nothing, making every mode measure the same thing
+        base_cfg = env_lib.EnvConfig(scenario=_mtbf_name(mtbf),
+                                     workload=WorkloadConfig(rate=8.0))
+        pool = env_lib.make_env_pool(base_cfg)
+        for mode, fo in MODES:
+            env_cfg = dataclasses.replace(base_cfg, failover=fo)
+            pols = [routers.quality_least_loaded(env_cfg=env_cfg)]
+            if include_rl:
+                sac_cfg, params = common.load_router("qos", env_cfg,
+                                                     pool=pool)
+                pols.append(routers.sac_policy("QoS-RL(ours)", sac_cfg,
+                                               params))
+            for pol in pols:
+                m = common.eval_policy(env_cfg, pool, pol, n_steps=n_steps)
+                us = m["wall_s"] / n_steps * 1e6
+                sps = n_steps / m["wall_s"]
+                common.emit(f"faults_mtbf{mtbf:g}/{mode}/{pol.name}", us,
+                            _fmt(m) + f";sps={sps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ suite).  Sections:
   fig12        arrival-rate sweep                             bench_rates
   fig13        latency-req sweep + admission orders           bench_deadlines
   scenarios    scripted dynamic workload/fleet sweep          bench_scenarios
+  faults       MTBF x failover-mode robustness sweep          bench_faults
   fig14/15     long-run QoS + GPU utilization                 bench_longrun
   fig16/17/18  training curves + ablations                    bench_ablation
   engine       advance_all microbenchmark (lockstep vs seed)  bench_engine
@@ -27,7 +28,8 @@ Two lanes run in ``.github/workflows/ci.yml``:
 
   * tier-1 (push/PR, jax matrix: pinned minimum 0.4.35 + latest):
     ``scripts/ci.sh`` = fast tests (``-m "not slow"``) + the engine,
-    routing, scaling, deadlines and scenarios perf gates, i.e. ``--quick
+    routing, latency, scaling, rates, deadlines, scenarios and faults
+    perf gates, i.e. ``--quick
     --only <suite> --check --require-baseline --tol 1.8`` with
     ``REPRO_BENCH_RL=0`` (heuristic rows only — no router quick-training
     on shared runners; ``--quick`` also keeps the scaling suite
@@ -48,7 +50,7 @@ Regenerating baselines (after an intentional perf change, on an idle
 box)::
 
     PYTHONPATH=src python -m benchmarks.run --quick --only engine --json
-    for s in routing scaling deadlines scenarios; do
+    for s in routing latency scaling rates deadlines scenarios faults; do
         REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
             --only $s --json
     done
@@ -126,6 +128,9 @@ def main() -> None:
     if want("scenarios"):
         from benchmarks import bench_scenarios
         section("scenarios", lambda: bench_scenarios.run(n_steps=steps_s))
+    if want("faults"):
+        from benchmarks import bench_faults
+        section("faults", lambda: bench_faults.run(n_steps=steps_s))
     if want("fig14", "fig15", "longrun"):
         from benchmarks import bench_longrun
         section("longrun",

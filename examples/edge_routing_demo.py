@@ -14,6 +14,14 @@ and the load-aware heuristics switching to per-expert occupancy.
 ``stress``): arrival-rate events and fleet events (failures, stragglers,
 memory claims) hit every policy identically, and SQF/QLL become
 availability-aware (they steer around down experts).
+
+``--failover`` arms the failure-aware request lifecycle
+(``repro.env.failover``) for every policy: requests stranded on a down
+expert drain into a bounded retry buffer with exponential backoff and
+re-admit to healthy experts instead of freezing through the outage;
+``--shed-watermark 0.9`` additionally sheds low-predicted-score admits
+while the fleet is overloaded.  Most interesting combined with
+``--scenario rolling_outage``.
 """
 import argparse
 import os
@@ -55,6 +63,14 @@ def main(argv=None) -> None:
                    help="named scripted scenario (repro.scenarios "
                         "registry) for time-varying workload/fleet "
                         "conditions")
+    p.add_argument("--failover", action="store_true",
+                   help="failure-aware lifecycle: drain stranded requests "
+                        "off down experts, retry with backoff, shed on "
+                        "exhausted budget/deadline (repro.env.failover)")
+    p.add_argument("--retry-budget", type=int, default=2)
+    p.add_argument("--shed-watermark", type=float, default=0.0,
+                   help="fleet occupancy in (0,1] arming overload "
+                        "shedding (0 disables; requires --failover)")
     p.add_argument("--quick-iters", type=int, default=150,
                    help="fallback router training iterations when no "
                         "checkpoint exists")
@@ -78,6 +94,18 @@ def main(argv=None) -> None:
         spec = scenarios.get(args.scenario)
         print(f"[demo] scenario {spec.name!r}: horizon={spec.horizon:g}s, "
               f"{len(spec.events)} events")
+    if args.failover:
+        import dataclasses
+
+        from repro.env import failover as failover_lib
+        fo = failover_lib.FailoverConfig(
+            retry_budget=args.retry_budget,
+            shed_watermark=(args.shed_watermark
+                            if args.shed_watermark > 0 else None))
+        env_cfg = dataclasses.replace(env_cfg, failover=fo)
+        print(f"[demo] failover: retry_budget={fo.retry_budget} "
+              f"backoff={fo.backoff_base:g}s buffer={fo.buffer_cap} "
+              f"watermark={fo.shed_watermark}")
     sac_cfg, params = load_or_train(env_cfg, pool,
                                     quick_iters=args.quick_iters)
 
@@ -89,14 +117,18 @@ def main(argv=None) -> None:
         routers.quality_least_loaded(caps=caps, env_cfg=env_cfg),
         routers.sac_policy("QoS-RL (ours)", sac_cfg, params),
     ]
+    fo_cols = " ".join(f"{c:>6s}" for c in ("shed", "retry", "redis")) \
+        if args.failover else ""
     print(f"\n{'policy':>16s} {'avg QoS':>8s} {'lat/tok':>9s} "
-          f"{'viol':>6s} {'done':>6s} {'drop':>6s}")
+          f"{'viol':>6s} {'done':>6s} {'drop':>6s} {fo_cols}")
     for pol in policies:
         m = training.evaluate(env_cfg, pool, pol, n_steps=args.steps, n_envs=2)
+        fo_vals = (f" {m['shed']:6.0f} {m['retried']:6.0f} "
+                   f"{m['redispatched']:6.0f}") if args.failover else ""
         print(f"{pol.name:>16s} {m['avg_qos']:8.4f} "
               f"{m['avg_latency_per_token']*1e3:7.2f}ms "
               f"{m['violation_rate']:6.3f} {m['completed']:6.0f} "
-              f"{m['dropped']:6.0f}")
+              f"{m['dropped']:6.0f}{fo_vals}")
 
 
 if __name__ == "__main__":

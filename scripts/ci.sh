@@ -14,10 +14,10 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # cores; the rationale + baseline-regeneration recipe live in ONE place:
 # the "CI & benchmarks" section of benchmarks/run.py.  --require-baseline
 # turns a missing baseline into a readable failure instead of a skip.
-# REPRO_BENCH_RL=0 keeps the routing/deadlines/scenarios gates CI-sized
-# (heuristic policies only — no router quick-training on a shared runner;
-# the nightly full bench covers the RL rows).
+# REPRO_BENCH_RL=0 keeps the policy-sweep gates CI-sized (heuristic
+# policies only — no router quick-training on a shared runner; the
+# nightly full bench covers the RL rows).
 REPRO_BENCH_RL=0 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --quick \
-    --only engine,routing,scaling,deadlines,scenarios \
+    --only engine,routing,latency,scaling,rates,deadlines,scenarios,faults \
     --check --require-baseline --tol 1.8

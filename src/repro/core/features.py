@@ -1,6 +1,12 @@
 """Request-level feature construction (Eq. 6) and raw-graph observation.
 
-f_q = (p_j, s_hat, d_hat, e_{j,n,t}, d_{j,t}, l_{j,t})  — normalized.
+f_q = (p_j, s_hat, d_hat, e_{j,n,t}, d_{j,t}, l_{j,t}, retry)  — normalized.
+
+The trailing ``retry`` channel (beyond Eq. 6) is the failure-aware
+lifecycle's re-dispatch count (``repro.env.failover``) normalized by the
+configured retry budget: 0.0 for first-dispatch requests and without
+failover, approaching 1.0 as a request burns its budget — a router can
+prefer placements that de-risk nearly-exhausted retries.
 
 Expert nodes carry (e_n, |Q_run|/R, |Q_wait|/W) plus the pending request's
 per-expert predictions (s_hat_{j,n}, d_hat_{j,n}), the profiled latency
@@ -17,10 +23,11 @@ penalties alone.
 
 Two layouts (``fmt=``):
 
-  * ``"padded"``   — per-expert request tensors ``run (N, R, 6)`` /
-    ``wait (N, W, 6)`` with validity masks (the PR 1 encoding);
+  * ``"padded"``   — per-expert request tensors ``run (N, R, REQ_FEATS)``
+    / ``wait (N, W, REQ_FEATS)`` with validity masks (the PR 1 encoding);
   * ``"segments"`` — the flat edge-list encoding for fleet-scale N: one
-    request-node tensor ``req (E, 6)`` with a ``seg`` expert-id vector,
+    request-node tensor ``req (E, REQ_FEATS)`` with a ``seg`` expert-id
+    vector,
     consumed by ``han.forward_segments`` via segment-softmax attention.
     Request->expert edges are materialized once instead of once per
     (expert, meta-path) pad block, every HAN intermediate stays O(E*D) —
@@ -44,11 +51,12 @@ import numpy as np
 from repro import scenarios
 from repro.env import engine_layout as layout
 
-REQ_FEATS = 6
+REQ_FEATS = 7
 EXP_FEATS = 9
 
 # request-node feature channels (same order in both layouts)
-REQ_P, REQ_PRED_S, REQ_PRED_D, REQ_MEM, REQ_D_CUR, REQ_LAT = range(6)
+(REQ_P, REQ_PRED_S, REQ_PRED_D, REQ_MEM, REQ_D_CUR, REQ_LAT,
+ REQ_RETRY) = range(7)
 
 
 def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
@@ -66,8 +74,13 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
     run_p = layout.run_p(q)
     run_d_cur = layout.run_d_cur(q)
     wait_pred_d = layout.wait_pred_d(q)
+    # retry channel normalizer: the failover retry budget (1.0 floor so
+    # the channel is well-defined — and identically zero — without
+    # failover, where every retry count is 0)
+    fo = getattr(cfg, "failover", None)
+    retry_norm = float(max(fo.retry_budget, 1)) if fo is not None else 1.0
 
-    # --- running request nodes (N, R, 6) ---
+    # --- running request nodes (N, R, REQ_FEATS) ---
     d_cur = run_d_cur.astype(jnp.float32)
     run_mem = (run_p + run_d_cur).astype(jnp.float32) * \
         pool.mem_per_token[:, None] / pool.mem_capacity[:, None]
@@ -79,10 +92,11 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         run_mem,
         d_cur / mo,
         l_cur / L,
+        layout.run_retry(q).astype(jnp.float32) / retry_norm,
     ], axis=-1)
     run_f = jnp.where(run_valid[..., None], run_f, 0.0)
 
-    # --- waiting request nodes (N, W, 6) ---
+    # --- waiting request nodes (N, W, REQ_FEATS) ---
     w_wait = (t - layout.wait_t_arrive(q)) / jnp.maximum(wait_pred_d, 1.0)
     wait_f = jnp.stack([
         layout.wait_p(q).astype(jnp.float32) / mp,
@@ -91,6 +105,7 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         jnp.zeros_like(w_wait),            # not yet resident in memory
         jnp.zeros_like(w_wait),            # d_{j,t} = 0
         w_wait / L,                        # projected per-token wait
+        layout.wait_retry(q).astype(jnp.float32) / retry_norm,
     ], axis=-1)
     wait_f = jnp.where(wait_valid[..., None], wait_f, 0.0)
 
@@ -140,7 +155,7 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         cap_frac,
     ], axis=-1)
 
-    # --- arrived request node (6,) ---
+    # --- arrived request node (REQ_FEATS,) ---
     arr_f = jnp.stack([
         r["p_len"].astype(jnp.float32) / mp,
         jnp.mean(r["pred_s"]),
@@ -148,6 +163,7 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
         jnp.zeros(()),
         jnp.zeros(()),
         jnp.zeros(()),
+        jnp.zeros(()),                     # fresh arrival: retry = 0
     ])
 
     obs = {

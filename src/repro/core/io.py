@@ -23,15 +23,40 @@ def _flatten(tree, prefix=""):
 
 
 def save_pytree(path: str, tree) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    """Crash-safe save: write to a unique temp file in the destination
+    directory, fsync, then atomically rename over ``path`` — a crash (or
+    SIGKILL from a preempted job) mid-save leaves either the old
+    checkpoint or the new one, never a truncated npz."""
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
-    tmp = path + ".tmp"
-    np.savez(tmp, **flat)
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def load_pytree(path: str, like=None):
-    data = dict(np.load(path))
+    try:
+        data = dict(np.load(path))
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # truncated / corrupt / not-an-npz
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: {e} — the file is "
+            "not a readable npz archive; delete it and retrain (saves are "
+            "atomic, so this usually means a partial copy or disk fault)"
+        ) from e
     root: dict = {}
     for key, val in data.items():
         parts = key.split("/")
@@ -52,14 +77,17 @@ def load_pytree(path: str, like=None):
 
 
 def router_ckpt_compatible(params) -> bool:
-    """True when a saved router's HAN expects the CURRENT expert feature
-    count — obs channels grow across PRs (e.g. the scenario up/cap-frac
-    channels widened EXP_FEATS 7->9), and a stale checkpoint would
-    otherwise crash mid-eval with an opaque matmul shape error.  Callers
+    """True when a saved router's HAN expects the CURRENT obs feature
+    counts — obs channels grow across PRs (the scenario up/cap-frac
+    channels widened EXP_FEATS 7->9; the failover retry channel widened
+    REQ_FEATS 6->7), and a stale checkpoint would otherwise crash
+    mid-eval with an opaque matmul shape error.  Callers
     (benchmarks.common.load_router, examples/edge_routing_demo) retrain
     with a loud message instead."""
     from repro.core import features
 
     if not isinstance(params, dict) or "han" not in params:
         return True  # flat-feature baseline: obs slice [:3] is stable
-    return params["han"]["proj_expert"].shape[0] == features.EXP_FEATS
+    han = params["han"]
+    return (han["proj_expert"].shape[0] == features.EXP_FEATS
+            and han["proj_req"].shape[0] == features.REQ_FEATS)

@@ -79,6 +79,25 @@ def _scenario_cur(env_cfg, env_state):
     return scenarios.at_time(st, env_state["clock"])
 
 
+def _overload_drop(env_cfg, env_state, action):
+    """Failover-aware overload guard shared by SQF/QLL: when the env's
+    failover config arms an overload watermark and the fleet sits at or
+    above it, proactively DROP (action 0) requests whose best predicted
+    score is below the shedding floor — the env would shed them at
+    admission anyway (``repro.env.failover``), so a routed push only pays
+    the impact penalty for a request that cannot land.  Without a
+    failover config (or without a watermark) this is the identity, so
+    the failover-free policies are bit-untouched."""
+    fo = getattr(env_cfg, "failover", None) if env_cfg is not None else None
+    if fo is None or fo.shed_watermark is None:
+        return action
+    from repro.env import failover as failover_lib
+    occ = failover_lib.fleet_occupancy(env_cfg, env_state)
+    best_s = jnp.max(env_state["pending"]["pred_s"])
+    doomed = (occ >= fo.shed_watermark) & (best_s < fo.shed_pred_s)
+    return jnp.where(doomed, 0, action)
+
+
 def shortest_queue(n_experts: int, caps=None, env_cfg=None) -> Policy:
     """Least-loaded routing; ``caps=(run_caps, wait_caps)`` switches the
     load signal to per-expert occupancy on ragged fleets.  With an
@@ -94,11 +113,13 @@ def shortest_queue(n_experts: int, caps=None, env_cfg=None) -> Policy:
         load = _queue_load(env_state, total)
         cur = _scenario_cur(env_cfg, env_state)
         if cur is None:
-            return jnp.argmin(load).astype(jnp.int32) + 1, pstate
-        up = cur["up"]
-        load = jnp.where(up, load, jnp.inf)
-        a = jnp.argmin(load).astype(jnp.int32) + 1
-        return jnp.where(jnp.any(up), a, 0), pstate
+            a = jnp.argmin(load).astype(jnp.int32) + 1
+        else:
+            up = cur["up"]
+            load = jnp.where(up, load, jnp.inf)
+            a = jnp.argmin(load).astype(jnp.int32) + 1
+            a = jnp.where(jnp.any(up), a, 0)
+        return _overload_drop(env_cfg, env_state, a), pstate
 
     return Policy("SQF", init_state, act)
 
@@ -159,7 +180,8 @@ def quality_least_loaded(slack: int = 2, caps=None, env_cfg=None) -> Policy:
             ok = ok & cur["up"] & (wlen < cur["wait_cap"])
         pred = env_state["pending"]["pred_s"]
         a = jnp.argmax(jnp.where(ok, pred, -1.0)).astype(jnp.int32) + 1
-        return jnp.where(jnp.any(ok), a, 0), pstate
+        a = jnp.where(jnp.any(ok), a, 0)
+        return _overload_drop(env_cfg, env_state, a), pstate
 
     return Policy("QLL", init_state, act)
 

@@ -49,6 +49,13 @@ class TrainConfig:
     zero_len_pred: bool = False
     seed: int = 0
     log_every: int = 25
+    # straggler detection: z-score threshold on per-iteration wall time
+    # (repro.distributed.fault_tolerance.StragglerDetector); None disables.
+    # Flagged iterations are counted into the history metrics
+    # (``straggler_flags``) and reported through ``log_fn`` so a hung
+    # device / noisy host shows up in training logs instead of silently
+    # stretching the run.
+    straggler_z: Optional[float] = None
     # observation encoding fed to the HAN: "padded" (N, R/W, F) per-expert
     # request tensors, or "segments" — the flat edge-list layout that holds
     # the HAN obs path linear in N at fleet scale (repro.core.features).
@@ -256,17 +263,35 @@ def train_router(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         env_cfg, sac_cfg, tc, pool, k_state, mesh=mesh)
     iteration = make_iteration(env_cfg, sac_cfg, tc, pool, opt, mesh=mesh)
 
+    detector = None
+    if tc.straggler_z is not None:
+        from repro.distributed.fault_tolerance import StragglerDetector
+        detector = StragglerDetector(z_threshold=tc.straggler_z)
+    straggler_flags = 0
+
     history = []
     t0 = time.time()
     for it in range(tc.iterations):
+        t_it = time.time()
         step = jnp.asarray(it * tc.updates_per_iter, jnp.int32)
         params, opt_state, env_states, buf, key, aux = iteration(
             params, opt_state, env_states, buf, key, step)
+        if detector is not None:
+            jax.block_until_ready(params)  # charge the iteration, not the
+            # NEXT iteration's implicit sync, to this step's wall time
+            if detector.update(time.time() - t_it):
+                straggler_flags += 1
+                if log_fn:
+                    log_fn({"iteration": it, "straggler": True,
+                            "step_s": round(time.time() - t_it, 3),
+                            "mean_s": round(detector.mean, 3)})
         if it % tc.log_every == 0 or it == tc.iterations - 1:
             m = jax.tree.map(float, aux)
             m["iteration"] = it
             m["transitions"] = int((it + 1) * tc.n_envs * tc.collect_steps)
             m["elapsed_s"] = round(time.time() - t0, 1)
+            if detector is not None:
+                m["straggler_flags"] = straggler_flags
             history.append(m)
             if log_fn:
                 log_fn(m)

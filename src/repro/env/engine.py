@@ -96,9 +96,26 @@ pool-params tree the capacity vectors ride:
     packed parameter operand) see pre-scaled gradients and need no extra
     channel.
 
+Failover conditions (retry channel / overload shedding)
+-------------------------------------------------------
+The failure-aware lifecycle (``repro.env.failover``) adds two engine-level
+pieces, both living in the pure ``advance_shard`` body so every backend
+inherits them:
+
+  * the packed layout's ``retry`` channel (``RI_RETRY``/``WI_RETRY``)
+    rides through admission — the admitted waiter's re-dispatch count is
+    copied into its running slot;
+  * ``advance_all(..., admit_min=)`` (N,) f32 is an overload-shedding
+    admission floor: waiters whose stored ``pred_s`` falls below their
+    expert's floor are *deferred* — still queued, but excluded from the
+    waiter pick (like the capacity masks, the floor is loop-invariant
+    within a window).  ``-INF``/None disables the floor.
+
 With ``up`` all-True and ``k_scale`` all-ones (the always-up scenario)
 every mask is all-True and every multiply is by 1.0, so the engine is
-byte-for-byte identical to the scenario-free path.  Caps that vary over
+byte-for-byte identical to the scenario-free path; likewise with the
+retry channel all-zero and no admission floor it is byte-identical to
+the failover-free engine.  Caps that vary over
 time are just the existing ``run_caps``/``wait_caps`` arguments passed
 per advance; the scenario runtime evicts beyond-cap occupants at the
 step boundary (``scenarios.evict_beyond_cap``) so the dead-slot contract
@@ -134,15 +151,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.env.engine_layout import (  # noqa: F401  (re-exported layout API)
-    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RUN_I_CH,
+    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RI_RETRY, RUN_I_CH,
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
-    WI_VALID, WI_P, WI_D_TRUE, WAIT_I_CH,
+    WI_VALID, WI_P, WI_D_TRUE, WI_RETRY, WAIT_I_CH,
     WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE, WAIT_F_CH,
     empty_queues, push_wait, mem_used, slot_valid,
-    run_valid, run_p, run_d_true, run_d_cur, run_score, run_pred_s,
-    run_pred_d, run_t_arrive, run_t_admit,
-    wait_valid, wait_p, wait_d_true, wait_score, wait_pred_s, wait_pred_d,
-    wait_t_arrive,
+    run_valid, run_p, run_d_true, run_d_cur, run_retry, run_score,
+    run_pred_s, run_pred_d, run_t_arrive, run_t_admit,
+    wait_valid, wait_p, wait_d_true, wait_retry, wait_score, wait_pred_s,
+    wait_pred_d, wait_t_arrive,
 )
 from repro.env.profiles import ExpertPool
 
@@ -159,12 +176,14 @@ QOS_AGE_BETA = 0.5
 
 
 def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None,
-                up=None, k_scale=None) -> dict:
+                up=None, k_scale=None, admit_min=None) -> dict:
     """The per-expert (N,) scalars the lockstep body needs.  Optional
     ``run_caps``/``wait_caps`` (N,) int32 capacity vectors and the
     scenario ``up`` availability mask join the tree (same leading expert
     axis, so they shard identically); a ``k_scale`` straggler multiplier
-    is folded straight into ``k1``/``k2``."""
+    is folded straight into ``k1``/``k2``; ``admit_min`` (N,) f32 is the
+    overload-shedding admission floor (waiters with ``pred_s`` below it
+    are deferred; ``-INF``/absent disables the floor)."""
     k1, k2 = pool.k1, pool.k2
     if k_scale is not None:
         scale = jnp.asarray(k_scale, jnp.float32)
@@ -178,6 +197,8 @@ def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None,
         params["wait_cap"] = jnp.asarray(wait_caps, jnp.int32)
     if up is not None:
         params["up"] = jnp.asarray(up, jnp.bool_)
+    if admit_min is not None:
+        params["admit_min"] = jnp.asarray(admit_min, jnp.float32)
     return params
 
 
@@ -226,6 +247,10 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     # scenario availability: a down expert admits nothing and decodes
     # nothing — its only permitted action is idle (all-True when absent)
     upv = params.get("up", jnp.ones((n,), jnp.bool_))      # (N,)
+    # overload-shedding admission floor: waiters with pred_s below their
+    # expert's floor are deferred — they stay queued but are invisible to
+    # the waiter pick this window (-INF/absent = everything admissible)
+    admit_min = params.get("admit_min", jnp.full((n,), -INF))  # (N,)
 
     acc0 = {key: jnp.zeros((n,), jnp.float32)
             for key in ("phi", "lat", "score", "wait", "done", "viol")}
@@ -236,6 +261,9 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
     # only the (N, W) valid mask.
     wait_i0, wait_f0 = queues["wait_i"], queues["wait_f"]
     w_sort_key = admit_sort_key(wait_f0, admit_order, latency_L)
+    # loop-invariant like the sort key: the floor compares against stored
+    # pred_s, so it folds into the same per-window admissibility mask
+    w_admissible = wait_f0[..., WF_PRED_S] >= admit_min[:, None]  # (N, W)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -257,7 +285,7 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
         # choose action per expert: admit > decode > idle (dead beyond-cap
         # slots are masked out of both the waiter pick and the free-slot
         # search; with uniform caps the masks are all-True)
-        w_live = wvalidb & wait_ok
+        w_live = wvalidb & wait_ok & w_admissible
         w_key = jnp.where(w_live, w_sort_key, INF)
         w_idx = jnp.argmin(w_key, -1)                      # (N,) next waiter
         w_has = jnp.any(w_live, -1)
@@ -302,6 +330,8 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
             jnp.where(slot_oh, head_p[:, None], p),
             jnp.where(slot_oh, head_i[:, WI_D_TRUE][:, None], d_true),
             jnp.where(slot_oh, 1, d_new),                  # prefill emits y1
+            jnp.where(slot_oh, head_i[:, WI_RETRY][:, None],
+                      run_i[..., RI_RETRY]),               # failover count
         ], axis=-1)
         adm_f = jnp.stack([head_f[:, WF_SCORE], head_f[:, WF_PRED_S],
                            head_f[:, WF_PRED_D], head_f[:, WF_T_ARRIVE],
@@ -371,14 +401,16 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
                 clocks: jax.Array, t_next: jax.Array, *,
                 backend: str = "xla", admit_order: str = "fifo",
                 run_caps=None, wait_caps=None, up=None, k_scale=None,
-                mesh=None, block_n: int = 128,
+                admit_min=None, mesh=None, block_n: int = 128,
                 ) -> Tuple[dict, jax.Array, dict]:
     """Advance all N experts to ``t_next`` on the selected backend (see the
     module docstring).  ``run_caps``/``wait_caps`` (N,) bound each
     expert's live slots for heterogeneous fleets (None = every packed
     slot); ``up`` (N,) bool marks available experts and ``k_scale`` (N,)
     scales the latency gradients (scenario conditions; None = all up, no
-    scaling); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
+    scaling); ``admit_min`` (N,) f32 defers waiters whose ``pred_s`` is
+    below the floor (overload shedding, ``repro.env.failover``; None = no
+    floor); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
     mesh over all local devices; ``block_n`` (pallas only) is the kernel's
     expert block size.
 
@@ -389,7 +421,7 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
         # fall through to the last ordering
         raise ValueError(f"unknown admit_order {admit_order!r}; "
                          f"expected one of {ADMIT_ORDERS}")
-    params = pool_params(pool, run_caps, wait_caps, up, k_scale)
+    params = pool_params(pool, run_caps, wait_caps, up, k_scale, admit_min)
     if backend == "xla":
         return advance_shard(params, latency_L, queues, clocks, t_next,
                              admit_order=admit_order)

@@ -3,10 +3,18 @@
 Queue state is four tensors instead of the seed's 17 named arrays
 (preserved in ``repro.env.engine_ref`` as the semantic oracle):
 
-    run_i   (N, R, RUN_I_CH)  int32    [valid, p, d_true, d_cur]
+    run_i   (N, R, RUN_I_CH)  int32    [valid, p, d_true, d_cur, retry]
     run_f   (N, R, RUN_F_CH)  float32  [score, pred_s, pred_d, t_arrive, t_admit]
-    wait_i  (N, W, WAIT_I_CH) int32    [valid, p, d_true]
+    wait_i  (N, W, WAIT_I_CH) int32    [valid, p, d_true, retry]
     wait_f  (N, W, WAIT_F_CH) float32  [score, pred_s, pred_d, t_arrive]
+
+``retry`` counts failover re-dispatches (``repro.env.failover``): 0 for a
+first-dispatch request, incremented each time the request is drained off
+a failed expert and re-admitted elsewhere.  It rides through admission
+(wait → run) unchanged and is surfaced to routers as an observation
+channel (``features.REQ_RETRY``).  With failover disabled it is
+identically zero everywhere, which keeps the packed tensors byte-identical
+to the retry-free engine.
 
 ``valid`` is stored as 0/1 int32; the ``run_valid``/``wait_valid`` accessors
 below return bools.  Invalid slots may hold stale field values — every
@@ -53,12 +61,12 @@ import jax
 import jax.numpy as jnp
 
 # Channel indices for the packed layout (see module docstring).
-RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR = 0, 1, 2, 3
-RUN_I_CH = 4
+RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RI_RETRY = 0, 1, 2, 3, 4
+RUN_I_CH = 5
 RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT = 0, 1, 2, 3, 4
 RUN_F_CH = 5
-WI_VALID, WI_P, WI_D_TRUE = 0, 1, 2
-WAIT_I_CH = 3
+WI_VALID, WI_P, WI_D_TRUE, WI_RETRY = 0, 1, 2, 3
+WAIT_I_CH = 4
 WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE = 0, 1, 2, 3
 WAIT_F_CH = 4
 
@@ -100,6 +108,10 @@ def run_d_cur(q: dict) -> jax.Array:
     return q["run_i"][..., RI_D_CUR]
 
 
+def run_retry(q: dict) -> jax.Array:
+    return q["run_i"][..., RI_RETRY]
+
+
 def run_score(q: dict) -> jax.Array:
     return q["run_f"][..., RF_SCORE]
 
@@ -132,6 +144,10 @@ def wait_d_true(q: dict) -> jax.Array:
     return q["wait_i"][..., WI_D_TRUE]
 
 
+def wait_retry(q: dict) -> jax.Array:
+    return q["wait_i"][..., WI_RETRY]
+
+
 def wait_score(q: dict) -> jax.Array:
     return q["wait_f"][..., WF_SCORE]
 
@@ -150,12 +166,14 @@ def wait_t_arrive(q: dict) -> jax.Array:
 
 def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
               score: jax.Array, pred_s: jax.Array, pred_d: jax.Array,
-              t: jax.Array, gate=True, wait_cap=None) -> Tuple[dict, jax.Array]:
+              t: jax.Array, gate=True, wait_cap=None,
+              retry=0) -> Tuple[dict, jax.Array]:
     """Masked push of one request into expert ``n``'s first free waiting
     slot (no-op when the queue is full or ``gate`` is False).  With a
     per-expert capacity vector ``wait_cap (N,)``, only slots below expert
     ``n``'s cap count as free — a full in-cap queue rejects the push even
-    when dead padded slots remain.  The single place that knows the
+    when dead padded slots remain.  ``retry`` is the failover re-dispatch
+    count (0 for fresh arrivals).  The single place that knows the
     wait-side channel order; returns (queues, pushed)."""
     free = ~wait_valid(q)[n]
     if wait_cap is not None:
@@ -164,7 +182,8 @@ def push_wait(q: dict, n: jax.Array, *, p: jax.Array, d_true: jax.Array,
     slot = jnp.argmax(free)
     new_i = jnp.stack([pushed.astype(jnp.int32),
                        jnp.asarray(p, jnp.int32),
-                       jnp.asarray(d_true, jnp.int32)])
+                       jnp.asarray(d_true, jnp.int32),
+                       jnp.asarray(retry, jnp.int32)])
     new_f = jnp.stack([jnp.asarray(score, jnp.float32),
                        jnp.asarray(pred_s, jnp.float32),
                        jnp.asarray(pred_d, jnp.float32),

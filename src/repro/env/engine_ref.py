@@ -34,10 +34,11 @@ def empty_queues(n: int, r: int, w: int) -> dict:
     bz = lambda *s: jnp.zeros(s, jnp.bool_)
     return {
         "run_valid": bz(n, r), "run_p": iz(n, r), "run_d_true": iz(n, r),
-        "run_d_cur": iz(n, r), "run_score": fz(n, r),
+        "run_d_cur": iz(n, r), "run_retry": iz(n, r), "run_score": fz(n, r),
         "run_pred_s": fz(n, r), "run_pred_d": fz(n, r),
         "run_t_arrive": fz(n, r), "run_t_admit": fz(n, r),
         "wait_valid": bz(n, w), "wait_p": iz(n, w), "wait_d_true": iz(n, w),
+        "wait_retry": iz(n, w),
         "wait_score": fz(n, w), "wait_pred_s": fz(n, w),
         "wait_pred_d": fz(n, w), "wait_t_arrive": fz(n, w),
     }
@@ -412,6 +413,143 @@ def evict_beyond_cap_named(q: dict, run_caps, wait_caps
 
 
 # ---------------------------------------------------------------------------
+# Failover-aware ORACLE EXTENSION (not seed code): the failure-aware
+# lifecycle reference for `repro.env.failover` — `_advance_one_scenario`
+# plus the two engine-level failover pieces, in the same naive
+# candidate-dict shape:
+#
+#   * an `admit_min` overload-shedding floor: waiters whose stored
+#     `pred_s` falls below it are deferred — excluded from the waiter
+#     pick but left queued (-INF disables the floor), and
+#   * the admitted waiter's `retry` re-dispatch count is copied into its
+#     running slot.
+#
+# The optimized engine's `advance_all(..., admit_min=)` (all three
+# backends) is diffed against this in tests/test_failover.py.
+# ---------------------------------------------------------------------------
+
+
+def _advance_one_failover(pool_scalars: dict, latency_L: float, q: dict,
+                          clock: jax.Array, t_next: jax.Array
+                          ) -> Tuple[dict, jax.Array, dict]:
+    """`_advance_one_scenario` with the `admit_min` admission floor and
+    the retry channel riding through admission."""
+    run_ok = jnp.arange(q["run_valid"].shape[0]) < pool_scalars["run_cap"]
+    wait_ok = jnp.arange(q["wait_valid"].shape[0]) < pool_scalars["wait_cap"]
+    up = pool_scalars["up"]
+    admit_min = pool_scalars["admit_min"]
+    k1, k2 = pool_scalars["k1"], pool_scalars["k2"]
+    cap, mpt = pool_scalars["mem_capacity"], pool_scalars["mem_per_token"]
+
+    acc0 = {"phi": jnp.float32(0), "lat": jnp.float32(0),
+            "score": jnp.float32(0), "wait": jnp.float32(0),
+            "done": jnp.float32(0), "viol": jnp.float32(0)}
+
+    def cond(c):
+        q, clock, _ = c
+        has_work = jnp.any(q["run_valid"]) | jnp.any(q["wait_valid"])
+        return (clock < t_next) & has_work
+
+    def body(c):
+        q, clock, acc = c
+        mem = jnp.sum(jnp.where(q["run_valid"],
+                                q["run_p"] + q["run_d_cur"], 0)) * mpt
+        w_live = (q["wait_valid"] & wait_ok
+                  & (q["wait_pred_s"] >= admit_min))  # overload defer
+        w_has = jnp.any(w_live)
+        w_key = jnp.where(w_live, q["wait_t_arrive"], INF)
+        w_idx = jnp.argmin(w_key)
+        r_free = jnp.argmin(q["run_valid"] | ~run_ok)  # first live empty slot
+        r_has_space = ~jnp.all(q["run_valid"] | ~run_ok)
+        head_p = q["wait_p"][w_idx]
+        fits = mem + mpt * (head_p.astype(jnp.float32) + 1.0) <= cap
+        can_admit = w_has & r_has_space & fits & up
+
+        # --- candidate A: prefill head ---
+        qa = dict(q)
+        qa["run_valid"] = q["run_valid"].at[r_free].set(True)
+        qa["run_p"] = q["run_p"].at[r_free].set(head_p)
+        qa["run_d_true"] = q["run_d_true"].at[r_free].set(q["wait_d_true"][w_idx])
+        qa["run_d_cur"] = q["run_d_cur"].at[r_free].set(1)  # prefill emits y1
+        qa["run_retry"] = q["run_retry"].at[r_free].set(q["wait_retry"][w_idx])
+        qa["run_score"] = q["run_score"].at[r_free].set(q["wait_score"][w_idx])
+        qa["run_pred_s"] = q["run_pred_s"].at[r_free].set(q["wait_pred_s"][w_idx])
+        qa["run_pred_d"] = q["run_pred_d"].at[r_free].set(q["wait_pred_d"][w_idx])
+        qa["run_t_arrive"] = q["run_t_arrive"].at[r_free].set(q["wait_t_arrive"][w_idx])
+        qa["run_t_admit"] = q["run_t_admit"].at[r_free].set(clock)
+        qa["wait_valid"] = q["wait_valid"].at[w_idx].set(False)
+        clock_a = clock + k1 * head_p.astype(jnp.float32)
+
+        # --- candidate B: decode iteration ---
+        run_tokens = jnp.sum(jnp.where(q["run_valid"],
+                                       q["run_p"] + q["run_d_cur"], 0))
+        clock_b = clock + k2 * run_tokens.astype(jnp.float32)
+        d_new = q["run_d_cur"] + q["run_valid"].astype(jnp.int32)
+        finished = q["run_valid"] & (d_new >= q["run_d_true"])
+        lat = (clock_b - q["run_t_arrive"]) / jnp.maximum(
+            q["run_d_true"].astype(jnp.float32), 1.0)
+        ok = lat <= latency_L
+        phi = jnp.where(finished, q["run_score"] * ok.astype(jnp.float32), 0.0)
+        qb = dict(q)
+        qb["run_d_cur"] = d_new
+        qb["run_valid"] = q["run_valid"] & ~finished
+        acc_b = {
+            "phi": acc["phi"] + jnp.sum(phi),
+            "lat": acc["lat"] + jnp.sum(jnp.where(finished, lat, 0.0)),
+            "score": acc["score"] + jnp.sum(jnp.where(finished, q["run_score"], 0.0)),
+            "done": acc["done"] + jnp.sum(finished.astype(jnp.float32)),
+            "viol": acc["viol"] + jnp.sum(
+                (finished & ~ok).astype(jnp.float32)),
+            "wait": acc["wait"] + jnp.sum(jnp.where(
+                finished, q["run_t_admit"] - q["run_t_arrive"], 0.0)),
+        }
+
+        r_has = jnp.any(q["run_valid"])
+        # select: admit > decode > idle; a down expert can only idle
+        use_a = can_admit
+        use_b = (~can_admit) & r_has & up
+        q_out = jax.tree.map(
+            lambda a, b, base: jnp.where(use_a, a, jnp.where(use_b, b, base)),
+            qa, qb, q)
+        clock_out = jnp.where(use_a, clock_a,
+                              jnp.where(use_b, clock_b, t_next))
+        acc_out = jax.tree.map(
+            lambda nb, base: jnp.where(use_b, nb, base), acc_b, acc)
+        return (q_out, clock_out, acc_out)
+
+    q, clock, acc = jax.lax.while_loop(cond, body, (q, clock, acc0))
+    clock = jnp.maximum(clock, t_next)  # idle experts jump forward
+    return q, clock, acc
+
+
+def advance_all_failover(pool: ExpertPool, latency_L: float, queues: dict,
+                         clocks: jax.Array, t_next: jax.Array,
+                         run_caps, wait_caps, up, k_scale, admit_min=None
+                         ) -> Tuple[dict, jax.Array, dict]:
+    """Failure-aware reference advance: vmap `_advance_one_failover` with
+    the CURRENT per-expert (N,) capacities, availability mask, straggler
+    k-multiplier and overload-shedding admission floor (None = no floor).
+    With `admit_min=None` and all retry counts zero this is bit-identical
+    to `advance_all_scenario`."""
+    scale = jnp.asarray(k_scale, jnp.float32)
+    n = clocks.shape[0]
+    if admit_min is None:
+        admit_min = jnp.full((n,), -INF)
+    scalars = {"k1": pool.k1 * scale, "k2": pool.k2 * scale,
+               "mem_capacity": pool.mem_capacity,
+               "mem_per_token": pool.mem_per_token,
+               "run_cap": jnp.asarray(run_caps, jnp.int32),
+               "wait_cap": jnp.asarray(wait_caps, jnp.int32),
+               "up": jnp.asarray(up, jnp.bool_),
+               "admit_min": jnp.asarray(admit_min, jnp.float32)}
+
+    def one(sc, q, clock):
+        return _advance_one_failover(sc, latency_L, q, clock, t_next)
+
+    return jax.vmap(one)(scalars, queues, clocks)
+
+
+# ---------------------------------------------------------------------------
 # Layout converters: legacy named fields <-> packed SoA (repro.env.engine)
 # ---------------------------------------------------------------------------
 
@@ -422,13 +560,14 @@ def pack_queues(named: dict) -> dict:
 
     run_i = jnp.stack(
         [named["run_valid"].astype(jnp.int32), named["run_p"],
-         named["run_d_true"], named["run_d_cur"]], axis=-1)
+         named["run_d_true"], named["run_d_cur"], named["run_retry"]],
+        axis=-1)
     run_f = jnp.stack(
         [named["run_score"], named["run_pred_s"], named["run_pred_d"],
          named["run_t_arrive"], named["run_t_admit"]], axis=-1)
     wait_i = jnp.stack(
         [named["wait_valid"].astype(jnp.int32), named["wait_p"],
-         named["wait_d_true"]], axis=-1)
+         named["wait_d_true"], named["wait_retry"]], axis=-1)
     wait_f = jnp.stack(
         [named["wait_score"], named["wait_pred_s"], named["wait_pred_d"],
          named["wait_t_arrive"]], axis=-1)
@@ -448,11 +587,13 @@ def unpack_queues(packed: dict) -> dict:
     return {
         "run_valid": e.run_valid(packed), "run_p": e.run_p(packed),
         "run_d_true": e.run_d_true(packed), "run_d_cur": e.run_d_cur(packed),
+        "run_retry": e.run_retry(packed),
         "run_score": e.run_score(packed), "run_pred_s": e.run_pred_s(packed),
         "run_pred_d": e.run_pred_d(packed), "run_t_arrive": e.run_t_arrive(packed),
         "run_t_admit": e.run_t_admit(packed),
         "wait_valid": e.wait_valid(packed), "wait_p": e.wait_p(packed),
-        "wait_d_true": e.wait_d_true(packed), "wait_score": e.wait_score(packed),
+        "wait_d_true": e.wait_d_true(packed), "wait_retry": e.wait_retry(packed),
+        "wait_score": e.wait_score(packed),
         "wait_pred_s": e.wait_pred_s(packed), "wait_pred_d": e.wait_pred_d(packed),
         "wait_t_arrive": e.wait_t_arrive(packed),
     }

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import scenarios
-from repro.env import engine, profiles, workload
+from repro.env import engine, failover, profiles, workload
+from repro.env.failover import FailoverConfig
 from repro.env.profiles import ExpertPool
 
 
@@ -72,6 +73,13 @@ class EnvConfig:
     # stationary workload against an always-up fleet; the "always_up"
     # scenario is byte-identical to None (tests/test_scenarios.py).
     scenario: Optional[str] = None
+    # failure-aware request lifecycle (repro.env.failover): drain
+    # requests stranded on down experts into a bounded retry buffer,
+    # re-admit them to healthy experts with budgets + exponential
+    # backoff, and (with a shed watermark) shed lowest-priority work
+    # under fleet overload.  None = the PR 5 freeze-in-place behaviour,
+    # byte-identical to the failover-free engine.
+    failover: Optional[FailoverConfig] = None
 
 
 def make_env_pool(cfg: EnvConfig) -> ExpertPool:
@@ -170,6 +178,13 @@ def _new_request(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
 def reset(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
     scenarios.for_cfg(cfg)  # unknown scenario names fail here, not in step
     k1, k2 = jax.random.split(key)
+    stat_keys = ["phi", "lat", "score", "wait", "done", "viol",
+                 "dropped", "routed", "evicted"]
+    if cfg.failover is not None:
+        # distinct failover accounting: shed (permanently removed via
+        # budget/deadline/overflow/overload), retried (entered the retry
+        # buffer), redispatched (re-admitted to a healthy expert)
+        stat_keys += ["shed", "retried", "redispatched"]
     state = {
         "key": k1,
         "clock": jnp.float32(0.0),
@@ -177,10 +192,10 @@ def reset(cfg: EnvConfig, pool: ExpertPool, key: jax.Array) -> dict:
         "queues": engine.empty_queues(cfg.n_experts, cfg.run_cap, cfg.wait_cap),
         "wl": workload.init_state(),
         "pending": _new_request(cfg, pool, k2),
-        "stats": {k: jnp.float32(0) for k in
-                  ("phi", "lat", "score", "wait", "done", "viol",
-                   "dropped", "routed", "evicted")},
+        "stats": {k: jnp.float32(0) for k in stat_keys},
     }
+    if cfg.failover is not None:
+        state["retry_buf"] = failover.empty_buffer(cfg.failover.buffer_cap)
     return state
 
 
@@ -239,11 +254,15 @@ def impact_penalty(cfg: EnvConfig, pool: ExpertPool, state: dict,
 
 
 def _admit(cfg: EnvConfig, state: dict, action: jax.Array,
-           up=None, wait_caps=None) -> Tuple[dict, jax.Array]:
+           up=None, wait_caps=None, admit_min=None
+           ) -> Tuple[dict, jax.Array, jax.Array]:
     """Push pending request into expert (action-1)'s waiting queue.
     ``up``/``wait_caps`` are the CURRENT scenario conditions (down experts
     admit nothing — the push converts to a drop); without a scenario the
-    static ragged caps apply."""
+    static ragged caps apply.  ``admit_min`` is the overload-shedding
+    floor: a routed request whose predicted score falls below its target
+    expert's floor is SHED (graceful degradation, counted apart from
+    drops).  Returns (state, dropped, shed)."""
     r = state["pending"]
     n = jnp.clip(action - 1, 0, cfg.n_experts - 1)
     if wait_caps is None:
@@ -251,6 +270,10 @@ def _admit(cfg: EnvConfig, state: dict, action: jax.Array,
     gate = action > 0
     if up is not None:
         gate = gate & up[n]
+    shed = jnp.zeros((), jnp.bool_)
+    if admit_min is not None:
+        shed = (action > 0) & (r["pred_s"][n] < admit_min[n])
+        gate = gate & ~shed
     # packed layout: one int + one float scatter instead of 7 field writes;
     # on a ragged fleet the push is rejected once the expert's IN-CAP wait
     # slots are full, even though dead padded slots remain
@@ -258,10 +281,10 @@ def _admit(cfg: EnvConfig, state: dict, action: jax.Array,
         state["queues"], n, p=r["p_len"], d_true=r["out_len"][n],
         score=r["score"][n], pred_s=r["pred_s"][n], pred_d=r["pred_d"][n],
         t=state["clock"], gate=gate, wait_cap=wait_caps)
-    dropped = (action == 0) | ((action > 0) & ~pushed)
+    dropped = (action == 0) | ((action > 0) & ~shed & ~pushed)
     state = dict(state)
     state["queues"] = queues
-    return state, dropped.astype(jnp.float32)
+    return state, dropped.astype(jnp.float32), shed.astype(jnp.float32)
 
 
 def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
@@ -273,21 +296,62 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
     whole step: beyond-current-cap occupants are evicted first (memory
     was claimed out from under them), admission and the advance run
     against the current caps/availability, stragglers' k1/k2 are scaled,
-    and the next arrival is drawn at the scenario-modulated rate."""
+    and the next arrival is drawn at the scenario-modulated rate.
+
+    With ``cfg.failover`` set, the step boundary becomes lookup ->
+    drain-failed -> evict -> gated-admit -> advance (``repro.env.
+    failover`` module docstring): requests stranded on down experts are
+    drained into the retry buffer BEFORE eviction, eligible retries are
+    re-admitted before the routed arrival, and — under the occupancy
+    watermark — lowest-priority admits are shed/deferred through the
+    engine's ``admit_min`` floor."""
     st = scenarios.for_cfg(cfg)
     run_caps, wait_caps = queue_caps(cfg)
     up = k_scale = rate_mult = None
     evicted = jnp.float32(0.0)
+    fo = cfg.failover
     if st is not None:
         cur = scenarios.at_time(st, state["clock"])
         run_caps, wait_caps = cur["run_cap"], cur["wait_cap"]
         up, k_scale, rate_mult = cur["up"], cur["k_scale"], cur["rate_mult"]
+
+    shed = retried = redispatched = jnp.float32(0.0)
+    admit_min = None
+    if fo is not None:
+        up_now = up if up is not None else jnp.ones((cfg.n_experts,),
+                                                    jnp.bool_)
+        # drain BEFORE evict: stranded work on an expert that is down AND
+        # cap-shrunk gets retried, not silently evicted
+        queues, buf, n_buf, n_shed = failover.drain_failed(
+            state["queues"], state["retry_buf"], up_now, state["clock"],
+            cfg.latency_L, fo)
+        retried, shed = retried + n_buf, shed + n_shed
+        state = {**state, "queues": queues, "retry_buf": buf}
+
+    if st is not None:
         queues, evicted = scenarios.evict_beyond_cap(
             state["queues"], run_caps, wait_caps)
         state = {**state, "queues": queues}
 
+    if fo is not None:
+        wc_now = wait_caps if wait_caps is not None else jnp.full(
+            (cfg.n_experts,), cfg.wait_cap, jnp.int32)
+        queues, buf, n_re, n_shed = failover.readmit(
+            state["queues"], state["retry_buf"], up_now, state["clock"],
+            wc_now, cfg.latency_L, fo, admit_order=cfg.admit_order)
+        redispatched, shed = redispatched + n_re, shed + n_shed
+        state = {**state, "queues": queues, "retry_buf": buf}
+        if fo.shed_watermark is not None:
+            rc_now = run_caps if run_caps is not None else jnp.full(
+                (cfg.n_experts,), cfg.run_cap, jnp.int32)
+            occ = failover.occupancy(state["queues"], rc_now, wc_now)
+            admit_min = failover.admit_min_of(occ, fo, cfg.n_experts)
+
     penalty = impact_penalty(cfg, pool, state, action, up=up)
-    state, dropped = _admit(cfg, state, action, up=up, wait_caps=wait_caps)
+    state, dropped, arr_shed = _admit(cfg, state, action, up=up,
+                                      wait_caps=wait_caps,
+                                      admit_min=admit_min)
+    shed = shed + arr_shed
 
     key, k_arr, k_req = jax.random.split(state["key"], 3)
     dt, wl_state = workload.next_arrival(cfg.workload, state["wl"],
@@ -297,10 +361,13 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
     queues, clocks, acc = engine.advance_all(
         pool, cfg.latency_L, state["queues"], state["expert_clock"], t_next,
         backend=cfg.engine_backend, admit_order=cfg.admit_order,
-        run_caps=run_caps, wait_caps=wait_caps, up=up, k_scale=k_scale)
+        run_caps=run_caps, wait_caps=wait_caps, up=up, k_scale=k_scale,
+        admit_min=admit_min)
     acc = jax.tree.map(lambda x: jnp.sum(x), acc)  # sum over experts
 
     reward = acc["phi"] - penalty - cfg.drop_penalty * dropped
+    if fo is not None:
+        reward = reward - fo.shed_penalty * shed
 
     stats = dict(state["stats"])
     for k in ("phi", "lat", "score", "wait", "done", "viol"):
@@ -308,6 +375,10 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
     stats["dropped"] = stats["dropped"] + dropped
     stats["routed"] = stats["routed"] + (action > 0).astype(jnp.float32)
     stats["evicted"] = stats["evicted"] + evicted
+    if fo is not None:
+        stats["shed"] = stats["shed"] + shed
+        stats["retried"] = stats["retried"] + retried
+        stats["redispatched"] = stats["redispatched"] + redispatched
 
     new_state = {
         "key": key,
@@ -318,6 +389,8 @@ def step(cfg: EnvConfig, pool: ExpertPool, state: dict,
         "pending": _new_request(cfg, pool, k_req),
         "stats": stats,
     }
+    if fo is not None:
+        new_state["retry_buf"] = state["retry_buf"]
     info = {"reward": reward, "penalty": penalty, "completions": acc["done"],
             "phi": acc["phi"]}
     return new_state, reward, info
@@ -328,7 +401,7 @@ def episode_metrics(state: dict) -> dict:
     completed requests."""
     s = state["stats"]
     done = jnp.maximum(s["done"], 1.0)
-    return {
+    out = {
         "avg_qos": s["phi"] / done,
         "avg_latency_per_token": s["lat"] / done,
         "avg_wait": s["wait"] / done,
@@ -339,3 +412,8 @@ def episode_metrics(state: dict) -> dict:
         "routed": s["routed"],
         "evicted": s["evicted"],
     }
+    if "shed" in s:  # failover lifecycle accounting (cfg.failover set)
+        out["shed"] = s["shed"]
+        out["retried"] = s["retried"]
+        out["redispatched"] = s["redispatched"]
+    return out

@@ -1,0 +1,331 @@
+"""Failure-aware request lifecycle: in-flight failover, retry budgets
+with exponential backoff, and overload shedding.
+
+PR 5 made expert failures first-class (``repro.scenarios`` ExpertDown /
+recovery) but left the failure *response* missing: requests already
+running or waiting on a downed expert froze in place and accumulated
+latency violations until recovery.  This module closes the loop from
+fault injection to fault tolerance (Bao et al. and the cloud-edge
+routing literature treat rerouting/failover across LLM instances as
+essential to sustained QoS under dynamic conditions).
+
+Fault model
+===========
+
+Step-boundary order
+-------------------
+With ``EnvConfig.failover`` set, one env step becomes
+
+    lookup -> drain-failed -> evict -> gated-admit -> advance
+
+  1. **lookup** — sample the scenario condition tables at the window
+     start (availability ``up``, current caps, rate multiplier);
+  2. **drain-failed** — every request on a DOWN expert (both the run and
+     the wait queue) is drained into the bounded global retry buffer
+     (``drain_failed``).  Draining runs *before* eviction so stranded
+     work on an expert that is simultaneously down and cap-shrunk is
+     retried, not silently evicted;
+  3. **evict** — beyond-current-cap occupants of up experts are evicted
+     (``scenarios.evict_beyond_cap``, unchanged);
+  4. **gated-admit** — eligible retries are re-admitted to healthy
+     experts (``readmit``), then the step's routed arrival is pushed
+     (``env._admit``), both against the current caps/availability and —
+     under overload — the shedding floor;
+  5. **advance** — the lockstep engine advances every expert to the next
+     arrival time (``engine.advance_all(..., admit_min=)``).
+
+Retry / backoff semantics
+-------------------------
+The retry buffer holds at most ``FailoverConfig.buffer_cap`` entries.
+Each drained request carries its per-request re-dispatch count ``retry``
+(the packed layout's ``RI_RETRY``/``WI_RETRY`` channel) and an
+exponential-backoff eligibility time
+
+    t_eligible = t_drain + backoff_base * 2**(retry - 1)
+
+so a request's k-th failover waits ``2**(k-1)`` backoff units before it
+may be re-admitted (a thundering herd of retries right at a failure
+would otherwise displace fresh arrivals).  At drain time a request is
+**shed** instead of buffered when
+
+  * its incremented retry count exceeds ``retry_budget``,
+  * it is already past its predicted deadline
+    ``t_arrive + latency_L * pred_d``, or
+  * the buffer is full (overflow sheds the excess candidates).
+
+Eligible retries (``t >= t_eligible``) are re-admitted best-first by the
+``engine.admit_sort_key`` ordering the env is configured with, to the
+least-loaded healthy expert with a free in-cap wait slot, at most
+``max_redispatch`` per step; entries that expire past their predicted
+deadline while waiting out the backoff are shed at the next readmit.
+A run-queue request loses its decode progress when drained (the packed
+layout stores no partial KV state across experts) but keeps its original
+``t_arrive``, so latency keeps accruing across the failure — failover
+helps by finishing the request elsewhere, not by forgiving the outage.
+
+Overload shedding
+-----------------
+With ``shed_watermark`` set, fleet occupancy (valid slots / live caps)
+at or above the watermark turns on graceful degradation: per-expert
+admission floor ``admit_min = shed_pred_s``.  Incoming arrivals whose
+predicted score falls below the floor are **shed** at the admit gate
+(dropped with the distinct ``shed`` stat/penalty), and already-queued
+waiters below the floor are **deferred** — excluded from the engine's
+waiter pick until occupancy falls back under the watermark (the
+``admit_min`` operand of ``engine.advance_all``; the Pallas kernel
+carries it in the widened ``PAR_CH`` parameter operand).  Below the
+watermark ``admit_min`` is ``-INF`` and every path is byte-identical to
+the failover-free engine.
+
+Conservation invariant
+----------------------
+Every request is always in exactly one place, so at every step boundary
+
+    arrivals == completed + dropped + evicted + shed + in-flight
+
+where in-flight counts valid run/wait slots plus valid retry-buffer
+entries.  ``tests/test_property.py`` fuzzes this under randomized chaos
+scenarios with failover on and off (nightly CI cranks the example count
+via ``REPRO_CHAOS_EXAMPLES``).
+
+Backend contract
+----------------
+The env-boundary pieces here (drain/readmit/occupancy) are pure jnp on
+the packed layout and identical for every engine backend; the engine-
+level pieces (retry channel through admission, ``admit_min`` deferral)
+live in the pure per-shard body, so ``xla``/``pallas``/``shard_map``
+stay bit-identical to the ``engine_ref.advance_all_failover`` oracle
+(``tests/test_failover.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.engine import INF, admit_sort_key
+from repro.env.engine_layout import (
+    RI_P, RI_D_TRUE, RI_RETRY, RI_VALID,
+    RF_T_ARRIVE, RUN_F_CH,
+    WI_P, WI_D_TRUE, WI_RETRY, WI_VALID,
+    WF_PRED_D, WF_PRED_S, WF_SCORE, WF_T_ARRIVE, WAIT_F_CH,
+    push_wait, run_valid, slot_valid, wait_valid,
+)
+
+# Retry-buffer int channel order.  Float channels reuse the wait-side
+# WF_* order so `engine.admit_sort_key` applies to the buffer directly.
+BUF_VALID, BUF_P, BUF_D_TRUE, BUF_RETRY = 0, 1, 2, 3
+BUF_I_CH = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverConfig:
+    """Failure-aware lifecycle knobs (module docstring has semantics).
+
+    ``shed_watermark=None`` disables overload shedding entirely —
+    failover (drain/retry/backoff) still runs.  ``shed_penalty`` is the
+    per-shed reward penalty, deliberately below ``EnvConfig.
+    drop_penalty``: shedding is the graceful path."""
+    retry_budget: int = 2        # max re-dispatches per request
+    backoff_base: float = 0.05   # seconds; t_elig = t + base * 2**(retry-1)
+    buffer_cap: int = 16         # global retry-buffer slots
+    max_redispatch: int = 4      # retries re-admitted per env step
+    shed_watermark: Optional[float] = None  # fleet occupancy in [0, 1]
+    shed_pred_s: float = 0.45    # admission floor while over the watermark
+    shed_penalty: float = 0.4
+
+    def __post_init__(self):
+        if self.retry_budget < 0 or self.buffer_cap < 1:
+            raise ValueError(
+                f"retry_budget must be >= 0 and buffer_cap >= 1; got "
+                f"{self.retry_budget}, {self.buffer_cap}")
+        if self.backoff_base < 0 or self.max_redispatch < 0:
+            raise ValueError(
+                f"backoff_base and max_redispatch must be >= 0; got "
+                f"{self.backoff_base}, {self.max_redispatch}")
+        if self.shed_watermark is not None and not (
+                0.0 < self.shed_watermark <= 1.0):
+            raise ValueError(
+                f"shed_watermark must lie in (0, 1] or be None; got "
+                f"{self.shed_watermark}")
+
+
+def empty_buffer(cap: int) -> dict:
+    """An empty retry buffer: ``buf_i (B, BUF_I_CH)`` int32, ``buf_f
+    (B, WAIT_F_CH)`` float32 (WF_* channel order), ``buf_t (B,)`` f32
+    eligibility times."""
+    return {
+        "buf_i": jnp.zeros((cap, BUF_I_CH), jnp.int32),
+        "buf_f": jnp.zeros((cap, WAIT_F_CH), jnp.float32),
+        "buf_t": jnp.zeros((cap,), jnp.float32),
+    }
+
+
+def in_buffer(buf: dict) -> jax.Array:
+    """Number of live retry-buffer entries (f32 scalar)."""
+    return jnp.sum((buf["buf_i"][:, BUF_VALID] > 0).astype(jnp.float32))
+
+
+def drain_failed(queues: dict, buf: dict, up: jax.Array, t: jax.Array,
+                 latency_L: float, cfg: FailoverConfig
+                 ) -> Tuple[dict, dict, jax.Array, jax.Array]:
+    """Drain every request stranded on a down expert (run AND wait
+    queues) into the retry buffer; shed budget-exhausted, past-deadline
+    and buffer-overflow candidates.  Returns
+    ``(queues, buf, n_buffered, n_shed)`` (f32 scalars).
+
+    All candidates leave their queues either way; a drained run-side
+    request loses its decode progress but keeps its ``t_arrive``."""
+    ri, rf = queues["run_i"], queues["run_f"]
+    wi, wf = queues["wait_i"], queues["wait_f"]
+    cap = buf["buf_i"].shape[0]
+    down = ~jnp.asarray(up, jnp.bool_)                       # (N,)
+    run_cand = (ri[..., RI_VALID] > 0) & down[:, None]       # (N, R)
+    wait_cand = (wi[..., WI_VALID] > 0) & down[:, None]      # (N, W)
+
+    # flatten run-major then wait-major into one candidate list; the
+    # float fields reuse that run_f's first WAIT_F_CH channels are
+    # exactly the wait-side [score, pred_s, pred_d, t_arrive] order
+    cand = jnp.concatenate([run_cand.reshape(-1), wait_cand.reshape(-1)])
+    cat_i = lambda a, b: jnp.concatenate([a.reshape(-1), b.reshape(-1)])
+    p = cat_i(ri[..., RI_P], wi[..., WI_P])
+    d_true = cat_i(ri[..., RI_D_TRUE], wi[..., WI_D_TRUE])
+    retry_new = cat_i(ri[..., RI_RETRY], wi[..., WI_RETRY]) + 1
+    fields = jnp.concatenate([
+        rf.reshape(-1, RUN_F_CH)[:, :WAIT_F_CH],
+        wf.reshape(-1, WAIT_F_CH)], axis=0)                  # (M, WAIT_F_CH)
+
+    past_deadline = t > (fields[:, WF_T_ARRIVE]
+                         + latency_L * fields[:, WF_PRED_D])
+    shed_now = cand & ((retry_new > cfg.retry_budget) | past_deadline)
+    surv = cand & ~shed_now
+
+    # compact survivors into the buffer's free slots, first-free-first;
+    # survivors beyond the free capacity overflow-shed.  Scatter via a
+    # sentinel row so the whole thing stays one static-shape .at[].set.
+    free = buf["buf_i"][:, BUF_VALID] == 0                   # (B,)
+    n_free = jnp.sum(free.astype(jnp.int32))
+    order = jnp.argsort(~free, stable=True)                  # free slots first
+    rank = jnp.cumsum(surv.astype(jnp.int32)) - 1            # (M,)
+    placed = surv & (rank < n_free)
+    dest = jnp.where(placed, order[jnp.clip(rank, 0, cap - 1)], cap)
+
+    rows_i = jnp.stack([jnp.ones_like(p), p, d_true, retry_new], axis=-1)
+    rows_t = t + cfg.backoff_base * jnp.exp2(
+        (retry_new - 1).astype(jnp.float32))
+    pad = lambda a: jnp.concatenate(
+        [a, jnp.zeros((1,) + a.shape[1:], a.dtype)], axis=0)
+    buf = {
+        "buf_i": pad(buf["buf_i"]).at[dest].set(rows_i)[:cap],
+        "buf_f": pad(buf["buf_f"]).at[dest].set(fields)[:cap],
+        "buf_t": pad(buf["buf_t"]).at[dest].set(rows_t)[:cap],
+    }
+
+    queues = {
+        **queues,
+        "run_i": ri.at[..., RI_VALID].set(jnp.where(
+            run_cand, 0, ri[..., RI_VALID])),
+        "wait_i": wi.at[..., WI_VALID].set(jnp.where(
+            wait_cand, 0, wi[..., WI_VALID])),
+    }
+    n_buffered = jnp.sum(placed.astype(jnp.float32))
+    n_shed = (jnp.sum(shed_now.astype(jnp.float32))
+              + jnp.sum((surv & ~placed).astype(jnp.float32)))
+    return queues, buf, n_buffered, n_shed
+
+
+def readmit(queues: dict, buf: dict, up: jax.Array, t: jax.Array,
+            wait_caps: jax.Array, latency_L: float, cfg: FailoverConfig,
+            *, admit_order: str = "fifo"
+            ) -> Tuple[dict, dict, jax.Array, jax.Array]:
+    """Re-admit up to ``cfg.max_redispatch`` backoff-eligible retries,
+    best-first by the env's ``admit_order`` sort key, each to the least-
+    loaded healthy expert with a free in-cap wait slot.  Entries past
+    their predicted deadline are shed first.  Returns
+    ``(queues, buf, n_readmitted, n_shed)`` (f32 scalars)."""
+    buf_i, buf_f, buf_t = buf["buf_i"], buf["buf_f"], buf["buf_t"]
+    upv = jnp.asarray(up, jnp.bool_)
+    wait_caps = jnp.asarray(wait_caps, jnp.int32)
+    w_width = queues["wait_i"].shape[1]
+
+    valid = buf_i[:, BUF_VALID] > 0
+    expired = valid & (t > (buf_f[:, WF_T_ARRIVE]
+                            + latency_L * buf_f[:, WF_PRED_D]))
+    n_shed = jnp.sum(expired.astype(jnp.float32))
+    buf_i = buf_i.at[:, BUF_VALID].set(
+        (valid & ~expired).astype(jnp.int32))
+
+    # the buffer's float channels are in WF_* order, so the engine's
+    # admission sort key ranks retries exactly like queued waiters
+    sort_key = admit_sort_key(buf_f, admit_order, latency_L)
+
+    def body(_, carry):
+        queues, buf_i, n_ok = carry
+        elig = (buf_i[:, BUF_VALID] > 0) & (t >= buf_t)
+        idx = jnp.argmin(jnp.where(elig, sort_key, INF))
+        wv = wait_valid(queues) & slot_valid(wait_caps, w_width)  # (N, W)
+        has_free = jnp.any(~wait_valid(queues)
+                           & slot_valid(wait_caps, w_width), -1) & upv
+        load = (jnp.sum(wv, -1) + jnp.sum(run_valid(queues), -1)
+                ).astype(jnp.float32)
+        tgt = jnp.argmin(jnp.where(has_free, load, INF))
+        do = jnp.any(elig) & jnp.any(has_free)
+        queues, pushed = push_wait(
+            queues, tgt, p=buf_i[idx, BUF_P],
+            d_true=buf_i[idx, BUF_D_TRUE],
+            score=buf_f[idx, WF_SCORE], pred_s=buf_f[idx, WF_PRED_S],
+            pred_d=buf_f[idx, WF_PRED_D],
+            t=buf_f[idx, WF_T_ARRIVE],  # keep the original arrival time
+            gate=do, wait_cap=wait_caps, retry=buf_i[idx, BUF_RETRY])
+        buf_i = buf_i.at[idx, BUF_VALID].set(
+            jnp.where(pushed, 0, buf_i[idx, BUF_VALID]))
+        return queues, buf_i, n_ok + pushed.astype(jnp.float32)
+
+    queues, buf_i, n_re = jax.lax.fori_loop(
+        0, cfg.max_redispatch, body, (queues, buf_i, jnp.float32(0.0)))
+    return queues, {"buf_i": buf_i, "buf_f": buf_f, "buf_t": buf_t}, \
+        n_re, n_shed
+
+
+def occupancy(queues: dict, run_caps: jax.Array, wait_caps: jax.Array
+              ) -> jax.Array:
+    """Fleet-wide occupancy in [0, 1]: valid in-cap slots over live
+    capacity (the overload-shedding watermark signal)."""
+    run_caps = jnp.asarray(run_caps, jnp.int32)
+    wait_caps = jnp.asarray(wait_caps, jnp.int32)
+    rv = run_valid(queues) & slot_valid(run_caps, queues["run_i"].shape[1])
+    wv = wait_valid(queues) & slot_valid(wait_caps, queues["wait_i"].shape[1])
+    used = jnp.sum(rv.astype(jnp.float32)) + jnp.sum(wv.astype(jnp.float32))
+    live = jnp.maximum(
+        (jnp.sum(run_caps) + jnp.sum(wait_caps)).astype(jnp.float32), 1.0)
+    return used / live
+
+
+def admit_min_of(occ: jax.Array, cfg: FailoverConfig, n_experts: int
+                 ) -> jax.Array:
+    """The (N,) overload-shedding admission floor: ``shed_pred_s`` while
+    occupancy sits at/above the watermark, ``-INF`` (no floor) below."""
+    floor = jnp.where(occ >= cfg.shed_watermark,
+                      jnp.float32(cfg.shed_pred_s), -INF)
+    return jnp.full((n_experts,), 1.0, jnp.float32) * floor
+
+
+def fleet_occupancy(cfg, state: dict) -> jax.Array:
+    """Occupancy for an ``EnvConfig``-shaped config + env state, using
+    the CURRENT scenario caps when a scenario is scripted (the signal
+    failover-aware heuristic routers share with the env step)."""
+    from repro import scenarios
+    from repro.env import env as env_lib
+
+    run_caps, wait_caps = env_lib.queue_caps(cfg)
+    st = scenarios.for_cfg(cfg)
+    if st is not None:
+        cur = scenarios.at_time(st, state["clock"])
+        run_caps, wait_caps = cur["run_cap"], cur["wait_cap"]
+    if run_caps is None:
+        run_caps = jnp.full((cfg.n_experts,), cfg.run_cap, jnp.int32)
+    if wait_caps is None:
+        wait_caps = jnp.full((cfg.n_experts,), cfg.wait_cap, jnp.int32)
+    return occupancy(state["queues"], run_caps, wait_caps)

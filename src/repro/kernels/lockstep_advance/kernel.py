@@ -45,9 +45,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.env.engine import admit_sort_key
 from repro.env.engine_layout import (
-    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR,
+    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RI_RETRY,
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
-    WI_VALID, WI_P, WI_D_TRUE,
+    WI_VALID, WI_P, WI_D_TRUE, WI_RETRY,
     WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE,
 )
 
@@ -57,10 +57,11 @@ N_ACC = 6  # phi, lat, score, wait, done, viol  (ops.ACC_KEYS order)
 
 # channel order of the packed per-expert parameter operand (ops.py builds
 # it; caps are stored as float32 and re-cast to int32 in the kernel, the
-# availability mask as 0.0/1.0 and re-cast to bool)
+# availability mask as 0.0/1.0 and re-cast to bool; admit_min is the
+# overload-shedding admission floor, -INF when disabled)
 (PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
- PAR_UP) = range(7)
-PAR_CH = 7
+ PAR_UP, PAR_ADMIT_MIN) = range(8)
+PAR_CH = 8
 
 
 def _first_index(mask: jax.Array, iota: jax.Array, size: int) -> jax.Array:
@@ -91,6 +92,7 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     run_capv = par[:, PAR_RUN_CAP].astype(jnp.int32)       # (B,)
     wait_capv = par[:, PAR_WAIT_CAP].astype(jnp.int32)
     upv = par[:, PAR_UP] > 0.5                             # (B,) availability
+    admit_min = par[:, PAR_ADMIT_MIN]                      # (B,) shed floor
 
     bn, r_cap = run_i0.shape[0], run_i0.shape[1]
     w_cap = wait_i0.shape[1]
@@ -102,7 +104,10 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     # wait side: fields are loop-invariant, only the valid bit is carried
     wait_p0 = wait_i0[..., WI_P]
     wait_d_true0 = wait_i0[..., WI_D_TRUE]
+    wait_retry0 = wait_i0[..., WI_RETRY]
     w_sort_key = admit_sort_key(wait_f0, admit_order, latency_L)
+    # overload-shedding floor: like the sort key, loop-invariant per window
+    w_admissible = wait_f0[..., WF_PRED_S] >= admit_min[:, None]  # (B, W)
 
     def active_mask(run_i, wvalidb, clocks):
         has_work = jnp.any(run_i[..., RI_VALID] > 0, -1) | jnp.any(wvalidb, -1)
@@ -123,7 +128,7 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
 
         # choose action per expert: admit > decode > idle (beyond-cap
         # slots are dead: masked out of the waiter pick and slot search)
-        w_live = wvalidb & wait_ok
+        w_live = wvalidb & wait_ok & w_admissible
         w_key = jnp.where(w_live, w_sort_key, INF)
         min_key = jnp.min(w_key, axis=-1, keepdims=True)
         w_idx = _first_index(w_key == min_key, wait_iota, w_cap)    # (B,)
@@ -164,11 +169,14 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
         # --- admit: masked scatter of the chosen waiter into slot r_free ---
         slot_oh = adm[:, None] & (run_iota == r_free[:, None])      # (B, R)
         head_d_true = _onehot_pick(head_sel, wait_d_true0)
+        head_retry = _onehot_pick(head_sel, wait_retry0)
         run_i = jnp.stack([
             (valid_after | slot_oh).astype(jnp.int32),
             jnp.where(slot_oh, head_p[:, None], p),
             jnp.where(slot_oh, head_d_true[:, None], d_true),
             jnp.where(slot_oh, 1, d_new),                  # prefill emits y1
+            jnp.where(slot_oh, head_retry[:, None],
+                      run_i[..., RI_RETRY]),               # failover count
         ], axis=-1)
         adm_f = jnp.stack([
             _onehot_pick(head_sel, wait_f0[..., WF_SCORE]),
@@ -208,8 +216,8 @@ def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
 
     run_i (N, R, CI) i32 | run_f (N, R, CF) f32 | wait_i (N, W, CI) i32 |
     wait_f (N, W, CF) f32 | par (N, PAR_CH) f32 [k1, k2, cap, mpt,
-    run_cap, wait_cap, up] | clocks (N, 1) f32 | t_next (1, 1) f32.  N
-    must divide by block_n.
+    run_cap, wait_cap, up, admit_min] | clocks (N, 1) f32 | t_next
+    (1, 1) f32.  N must divide by block_n.
 
     Returns (run_i, run_f, wait_valid (N, W) i32, clocks (N, 1),
     acc (N, 6) f32 in ``ops.ACC_KEYS`` order).

@@ -9,10 +9,13 @@ run/wait capacity) that the lockstep loop never touches; their rows are
 dropped before returning.
 
 ``params`` may carry optional per-expert ``run_cap``/``wait_cap`` (N,)
-capacity vectors (ragged heterogeneous fleets) and an ``up`` (N,) bool
-availability mask (scenario fleets); they ride in the packed (N, PAR_CH)
-float32 parameter operand (``kernel.PAR_*`` channel order) and default to
-the packed slot widths (every slot live) / all-up.
+capacity vectors (ragged heterogeneous fleets), an ``up`` (N,) bool
+availability mask (scenario fleets) and an ``admit_min`` (N,) f32
+overload-shedding admission floor (failover fleets); they ride in the
+packed (N, PAR_CH) float32 parameter operand (``kernel.PAR_*`` channel
+order) and default to the packed slot widths (every slot live) / all-up /
+no floor (-INF).  Padded inert experts get a zero admit_min, which is
+harmless: they own zero capacity and no waiters.
 """
 from __future__ import annotations
 
@@ -53,11 +56,14 @@ def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
     run_cap = params.get("run_cap", jnp.full((n,), r_width, jnp.int32))
     wait_cap = params.get("wait_cap", jnp.full((n,), w_width, jnp.int32))
     up = params.get("up", jnp.ones((n,), jnp.bool_))
+    admit_min = params.get("admit_min", jnp.full((n,), -1e30, jnp.float32))
     par = jnp.stack([params["k1"], params["k2"], params["mem_capacity"],
                      params["mem_per_token"],
                      run_cap.astype(jnp.float32),
                      wait_cap.astype(jnp.float32),
-                     up.astype(jnp.float32)], axis=-1).astype(jnp.float32)
+                     up.astype(jnp.float32),
+                     admit_min.astype(jnp.float32)],
+                    axis=-1).astype(jnp.float32)
     run_i, run_f = queues["run_i"], queues["run_f"]
     wait_i, wait_f = queues["wait_i"], queues["wait_f"]
     clk = clocks[:, None].astype(jnp.float32)

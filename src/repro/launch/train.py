@@ -27,6 +27,17 @@ stragglers, memory claim/release) instead of a stationary workload:
 
     PYTHONPATH=src python -m repro.launch.train --router --iters 200 \
         --scenario flash_crowd
+
+``--failover`` arms the failure-aware request lifecycle
+(``repro.env.failover``): requests stranded on a failed expert drain
+into a bounded retry buffer with exponential backoff and re-admit to
+healthy experts, with overload shedding via ``--shed-watermark``;
+``--straggler-z`` flags anomalously slow training iterations through
+``fault_tolerance.StragglerDetector``:
+
+    PYTHONPATH=src python -m repro.launch.train --router --iters 200 \
+        --scenario rolling_outage --failover --shed-watermark 0.9 \
+        --straggler-z 4.0
 """
 from __future__ import annotations
 
@@ -62,6 +73,16 @@ def train_router_main(args) -> None:
         spec = scenarios.get(args.scenario)  # fail loudly on a bad name
         print(f"[train] scenario {spec.name!r}: horizon={spec.horizon:g}s, "
               f"{len(spec.events)} events")
+    if args.failover:
+        from repro.env import failover as failover_lib
+        fo = failover_lib.FailoverConfig(
+            retry_budget=args.retry_budget,
+            shed_watermark=(args.shed_watermark
+                            if args.shed_watermark > 0 else None))
+        env_cfg = dataclasses.replace(env_cfg, failover=fo)
+        print(f"[train] failover: retry_budget={fo.retry_budget} "
+              f"backoff={fo.backoff_base:g}s buffer={fo.buffer_cap} "
+              f"watermark={fo.shed_watermark}")
     sac_cfg = sac_lib.SACConfig(
         n_actions=env_cfg.n_experts + 1,
         flat_dim=env_cfg.n_experts * 3,
@@ -69,14 +90,23 @@ def train_router_main(args) -> None:
                      if args.obs_fmt == "segments" else None),
         run_caps=(env_cfg.run_caps if args.obs_fmt == "segments" else None),
         wait_caps=(env_cfg.wait_caps if args.obs_fmt == "segments" else None))
-    tc = training.TrainConfig(iterations=args.iters, obs_fmt=args.obs_fmt)
+    tc = training.TrainConfig(iterations=args.iters, obs_fmt=args.obs_fmt,
+                              straggler_z=args.straggler_z)
     mesh = make_train_mesh() if args.router_mesh else None
     if mesh is not None:
         print(f"[train] replay capacity sharded over {mesh}")
+
+    def log_fn(m):
+        if m.get("straggler"):
+            print(f"  [straggler] it={m['iteration']} "
+                  f"step={m['step_s']:.3f}s vs mean={m['mean_s']:.3f}s")
+            return
+        flags = (f" stragglers={m['straggler_flags']}"
+                 if "straggler_flags" in m else "")
+        print(f"  it={m['iteration']} rew={m['collect_reward']:.3f}{flags}")
+
     params, history = training.train_router(
-        env_cfg, sac_cfg, tc, pool=pool, mesh=mesh,
-        log_fn=lambda m: print(f"  it={m['iteration']} "
-                               f"rew={m['collect_reward']:.3f}"))
+        env_cfg, sac_cfg, tc, pool=pool, mesh=mesh, log_fn=log_fn)
     print(f"[train] router done: final reward "
           f"{history[-1]['collect_reward']:.3f}")
 
@@ -97,6 +127,22 @@ def main() -> None:
                         "flash_crowd, rolling_outage, memory_pressure, "
                         "stress, ...) for time-varying workload/fleet "
                         "conditions")
+    p.add_argument("--failover", action="store_true",
+                   help="failure-aware request lifecycle (repro.env."
+                        "failover): drain stranded requests off down "
+                        "experts into a retry buffer with exponential "
+                        "backoff, re-admit to healthy experts, shed on "
+                        "exhausted budget/deadline")
+    p.add_argument("--retry-budget", type=int, default=2,
+                   help="max re-dispatches per request before shedding")
+    p.add_argument("--shed-watermark", type=float, default=0.0,
+                   help="fleet occupancy in (0,1] that arms overload "
+                        "shedding of low-predicted-score admits "
+                        "(0 disables; requires --failover)")
+    p.add_argument("--straggler-z", type=float, default=None,
+                   help="flag router-training iterations whose wall time "
+                        "z-score exceeds this (fault_tolerance."
+                        "StragglerDetector); logged + counted in history")
     p.add_argument("--iters", type=int, default=400)
     p.add_argument("--arch", default="qwen1.5-0.5b")
     p.add_argument("--steps", type=int, default=100)

@@ -19,6 +19,14 @@ run_caps=, wait_caps=)``), so all three backends — xla, pallas,
 shard_map — inherit scenario semantics from one code path and stay
 bit-identical to the scenario-aware oracle
 (``engine_ref.advance_all_scenario``).
+
+Scenarios inject faults; the failure *response* — draining requests
+stranded on a down expert into a retry buffer with exponential backoff,
+re-admitting them to healthy experts, and shedding under overload — is
+the failure-aware request lifecycle in ``repro.env.failover``, whose
+module docstring documents the fault model (step-boundary order,
+retry/backoff/shedding semantics, and the request-conservation
+invariant).  ``EnvConfig.failover`` arms it against any scenario here.
 """
 from repro.scenarios.compile import ScenarioTensors, compile_spec  # noqa: F401
 from repro.scenarios.runtime import (at_time, availability, compiled,  # noqa: F401

@@ -48,9 +48,14 @@ def save(ckpt_dir: str, step: int, state: Any, *, keep_last: int = 3,
         manifest["leaves"][key] = {
             "shape": list(arr.shape), "dtype": str(arr.dtype), "name": name,
         }
-    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrays)
+    with open(os.path.join(tmp, f"shard_{host_id}.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -79,9 +84,22 @@ def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # truncated json / corrupt npz / bad zip
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: {e} — writes are "
+            "atomic (temp dir + rename), so this usually means a partial "
+            "copy or disk fault; delete the step directory and restore an "
+            "earlier step"
+        ) from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise ValueError(
+            f"corrupt checkpoint manifest {path!r}: missing 'leaves' table")
 
     flat_like, treedef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten_with_paths(like).keys())

@@ -1,0 +1,557 @@
+"""Failure-aware request lifecycle (``repro.env.failover``): backend
+bit-identity against the failover oracle across a failure+recovery,
+failover-off byte-identity with the PR 5 engine/env, drain/readmit/
+shedding unit semantics, env-level conservation, and the ride-along
+robustness satellites (crash-safe checkpoint saves, corrupt-checkpoint
+detection, straggler flagging)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.env import engine, engine_ref, env as env_lib, failover, profiles
+from repro.env.engine import INF
+from repro.env.failover import FailoverConfig
+
+N, R, W = 6, 4, 4
+STEPS = 320
+LAT_L = 0.030
+BACKENDS = ("xla", "pallas", "shard_map")
+
+# Acceptance scenario (ISSUE 6): one failure AND recovery crossed by a
+# 320-step λ=5 drive, plus a second overlapping outage so the retry
+# buffer sees pressure while part of the fleet is still down.
+TEST_SPEC = scenarios.ScenarioSpec(
+    name="_test_failover", horizon=60.0, dt=0.5,
+    events=(scenarios.ExpertDown(expert=1, t0=6.0, t1=20.0),
+            scenarios.ExpertDown(expert=3, t0=12.0, t1=30.0)))
+
+FO = FailoverConfig(retry_budget=2, backoff_base=0.05, buffer_cap=12,
+                    max_redispatch=3, shed_watermark=0.7, shed_pred_s=0.5)
+
+
+def _arrival_stream(steps: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 7)
+    return {
+        "dt": jax.random.exponential(ks[0], (steps,)) / 5.0,
+        "expert": jax.random.randint(ks[1], (steps,), 0, N),
+        "p": jax.random.randint(ks[2], (steps,), 16, 512),
+        "d_true": jax.random.randint(ks[3], (steps,), 8, 300),
+        "score": jax.random.uniform(ks[4], (steps,), minval=0.2, maxval=0.95),
+        "pred_s": jax.random.uniform(ks[5], (steps,), minval=0.2,
+                                     maxval=0.95),
+        "pred_d": jax.random.uniform(ks[6], (steps,), minval=8.0,
+                                     maxval=300.0),
+    }
+
+
+def _drive_failover(pool, stream, st, backend=None):
+    """Drive lookup -> drain -> evict -> readmit -> gated admit -> advance
+    with the failure-aware pipeline.  The drain/readmit/occupancy pieces
+    are the SHARED packed-layout implementation (they are env-boundary
+    code, identical for every backend); only the advance differs —
+    ``backend=None`` round-trips packed -> named through the
+    ``engine_ref.advance_all_failover`` oracle, anything else runs
+    ``engine.advance_all(..., admit_min=)`` on that backend.  Returns
+    (queues, clocks, clock/acc traces, drained/shed totals)."""
+    oracle = backend is None
+
+    def step(carry, x):
+        q, buf, clocks, t, n_drained, n_shed = carry
+        cur = scenarios.at_time(st, t)
+        q, buf, n_buf, shed_d = failover.drain_failed(
+            q, buf, cur["up"], t, LAT_L, FO)
+        q, ev = scenarios.evict_beyond_cap(q, cur["run_cap"],
+                                           cur["wait_cap"])
+        q, buf, n_re, shed_r = failover.readmit(
+            q, buf, cur["up"], t, cur["wait_cap"], LAT_L, FO)
+        occ = failover.occupancy(q, cur["run_cap"], cur["wait_cap"])
+        admit_min = failover.admit_min_of(occ, FO, N)
+        gate = (cur["up"][x["expert"]]
+                & (x["pred_s"] >= admit_min[x["expert"]]))
+        q, _ = engine.push_wait(q, x["expert"], p=x["p"],
+                                d_true=x["d_true"], score=x["score"],
+                                pred_s=x["pred_s"], pred_d=x["pred_d"], t=t,
+                                gate=gate, wait_cap=cur["wait_cap"])
+        t_next = t + x["dt"] / cur["rate_mult"]
+        if oracle:
+            named = engine_ref.unpack_queues(q)
+            named, clocks, acc = engine_ref.advance_all_failover(
+                pool, LAT_L, named, clocks, t_next, cur["run_cap"],
+                cur["wait_cap"], cur["up"], cur["k_scale"],
+                admit_min=admit_min)
+            q = engine_ref.pack_queues(named)
+        else:
+            q, clocks, acc = engine.advance_all(
+                pool, LAT_L, q, clocks, t_next, backend=backend,
+                run_caps=cur["run_cap"], wait_caps=cur["wait_cap"],
+                up=cur["up"], k_scale=cur["k_scale"], admit_min=admit_min)
+        return ((q, buf, clocks, t_next, n_drained + n_buf,
+                 n_shed + shed_d + shed_r), (clocks, acc))
+
+    init = (engine.empty_queues(N, R, W), failover.empty_buffer(FO.buffer_cap),
+            jnp.zeros((N,), jnp.float32), jnp.float32(0.0),
+            jnp.float32(0.0), jnp.float32(0.0))
+    (q, buf, clocks, _, drained, shed), (clock_trace, acc_trace) = jax.jit(
+        lambda: jax.lax.scan(step, init, stream))()
+    return q, buf, clocks, clock_trace, acc_trace, drained, shed
+
+
+@pytest.fixture(scope="module")
+def failover_traces():
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(STEPS)
+    st = scenarios.compile_spec(TEST_SPEC, N, R, W)
+    out = {"ref": _drive_failover(pool, stream, st)}
+    for backend in BACKENDS:
+        out[backend] = _drive_failover(pool, stream, st, backend)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Backend bit-identity vs the failover oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_failover_backends_match_oracle(failover_traces, backend):
+    rq, rbuf, rclk, rclk_tr, racc_tr, _, _ = failover_traces["ref"]
+    bq, bbuf, bclk, bclk_tr, bacc_tr, _, _ = failover_traces[backend]
+    for k in ("run_i", "run_f", "wait_i", "wait_f"):
+        np.testing.assert_array_equal(np.asarray(rq[k]), np.asarray(bq[k]),
+                                      err_msg=f"{backend}/{k}")
+    for k in rbuf:  # buffer is shared code, but must agree given the
+        np.testing.assert_array_equal(  # backend's queue evolution
+            np.asarray(rbuf[k]), np.asarray(bbuf[k]),
+            err_msg=f"{backend}/{k}")
+    np.testing.assert_array_equal(np.asarray(rclk_tr), np.asarray(bclk_tr))
+    for k in racc_tr:
+        np.testing.assert_array_equal(np.asarray(racc_tr[k]),
+                                      np.asarray(bacc_tr[k]),
+                                      err_msg=f"{backend}/acc[{k}]")
+
+
+def test_failover_drive_is_not_vacuous(failover_traces):
+    """The acceptance drive must actually exercise failover: requests
+    were drained off a down expert (non-empty queues at failure time),
+    some were shed, and work still completed across the outages."""
+    _, _, _, _, acc_tr, drained, shed = failover_traces["ref"]
+    assert float(drained) > 0, "no request was ever drained to the buffer"
+    assert float(shed) > 0, "no request was ever shed"
+    assert float(jnp.sum(acc_tr["done"])) > 50
+
+
+# ---------------------------------------------------------------------------
+# Failover disabled == PR 5 engine, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_admit_min_disabled_byte_identical(backend):
+    """admit_min=-INF (the disabled floor) must be byte-identical to not
+    passing admit_min at all — the PR 5 engine path."""
+    pool = profiles.make_pool(N)
+    stream = _arrival_stream(200, seed=3)
+
+    def drive(admit_min):
+        def step(carry, x):
+            q, clocks, t = carry
+            q, _ = engine.push_wait(q, x["expert"], p=x["p"],
+                                    d_true=x["d_true"], score=x["score"],
+                                    pred_s=x["pred_s"], pred_d=x["pred_d"],
+                                    t=t, gate=jnp.bool_(True))
+            t_next = t + x["dt"]
+            q, clocks, acc = engine.advance_all(
+                pool, LAT_L, q, clocks, t_next, backend=backend,
+                admit_min=admit_min)
+            return (q, clocks, t_next), acc
+
+        init = (engine.empty_queues(N, R, W), jnp.zeros((N,), jnp.float32),
+                jnp.float32(0.0))
+        return jax.jit(lambda: jax.lax.scan(step, init, stream))()
+
+    (q0, c0, _), acc0 = drive(None)
+    (q1, c1, _), acc1 = drive(jnp.full((N,), -INF))
+    for k in q0:
+        np.testing.assert_array_equal(np.asarray(q0[k]), np.asarray(q1[k]))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    for k in acc0:
+        np.testing.assert_array_equal(np.asarray(acc0[k]),
+                                      np.asarray(acc1[k]))
+
+
+def test_env_failover_no_failures_matches_plain_env():
+    """With failover armed but nothing failing (no scenario, no
+    watermark), every queue tensor and shared stat must stay
+    byte-identical to the failover-free env."""
+    cfg0 = env_lib.EnvConfig(n_experts=4, run_cap=3, wait_cap=3)
+    cfg1 = dataclasses.replace(cfg0, failover=FailoverConfig())
+    pool = env_lib.make_env_pool(cfg0)
+    key = jax.random.PRNGKey(11)
+    s0 = env_lib.reset(cfg0, pool, key)
+    s1 = env_lib.reset(cfg1, pool, key)
+    for i in range(40):
+        a = jnp.asarray((i % 5))  # includes drops (action 0)
+        s0, r0, _ = env_lib.step(cfg0, pool, s0, a)
+        s1, r1, _ = env_lib.step(cfg1, pool, s1, a)
+        assert float(r0) == float(r1)
+    for k in s0["queues"]:
+        np.testing.assert_array_equal(np.asarray(s0["queues"][k]),
+                                      np.asarray(s1["queues"][k]))
+    for k in s0["stats"]:
+        assert float(s0["stats"][k]) == float(s1["stats"][k]), k
+    assert float(failover.in_buffer(s1["retry_buf"])) == 0.0
+    for k in ("shed", "retried", "redispatched"):
+        assert float(s1["stats"][k]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# drain_failed / readmit unit semantics
+# ---------------------------------------------------------------------------
+
+
+def _queues_with(entries):
+    """Build packed queues holding the given wait-side entries:
+    (expert, pred_s, pred_d, t_arrive, retry)."""
+    q = engine.empty_queues(N, R, W)
+    for (n, pred_s, pred_d, t_arr, retry) in entries:
+        q, pushed = engine.push_wait(
+            q, jnp.asarray(n), p=jnp.asarray(64), d_true=jnp.asarray(32),
+            score=jnp.asarray(0.5), pred_s=jnp.asarray(pred_s),
+            pred_d=jnp.asarray(pred_d), t=jnp.asarray(t_arr),
+            gate=jnp.bool_(True), retry=jnp.asarray(retry))
+        assert bool(pushed)
+    return q
+
+
+def test_drain_moves_stranded_to_buffer_with_backoff():
+    fo = FailoverConfig(retry_budget=3, backoff_base=0.1, buffer_cap=8)
+    q = _queues_with([(1, 0.8, 50.0, 0.0, 0), (1, 0.6, 50.0, 0.0, 1),
+                      (2, 0.7, 50.0, 0.0, 0)])
+    up = jnp.asarray([1, 0, 1, 1, 1, 1])  # expert 1 down
+    buf = failover.empty_buffer(fo.buffer_cap)
+    q2, buf2, n_buf, n_shed = failover.drain_failed(
+        q, buf, up, jnp.float32(0.5), LAT_L, fo)
+    assert float(n_buf) == 2.0 and float(n_shed) == 0.0
+    # expert 1's queue emptied, expert 2 untouched
+    assert int(jnp.sum(engine.wait_valid(q2)[1])) == 0
+    assert int(jnp.sum(engine.wait_valid(q2)[2])) == 1
+    bi = np.asarray(buf2["buf_i"])
+    bt = np.asarray(buf2["buf_t"])
+    live = bi[:, failover.BUF_VALID] > 0
+    assert live.sum() == 2
+    # retry counts incremented; backoff doubles per retry
+    retries = sorted(bi[live, failover.BUF_RETRY].tolist())
+    assert retries == [1, 2]
+    t_by_retry = {int(r): float(t) for r, t in zip(
+        bi[live, failover.BUF_RETRY], bt[live])}
+    assert t_by_retry[1] == pytest.approx(0.5 + 0.1)   # 2**(1-1) * base
+    assert t_by_retry[2] == pytest.approx(0.5 + 0.2)   # 2**(2-1) * base
+
+
+def test_drain_sheds_exhausted_budget_and_past_deadline():
+    fo = FailoverConfig(retry_budget=1, backoff_base=0.1, buffer_cap=8)
+    # entry A: retry already at budget -> shed; entry B: past deadline
+    # (t_arrive=0, pred_d=10, L*pred_d=0.3 < t=5) -> shed
+    q = _queues_with([(1, 0.8, 50.0, 4.9, 1), (1, 0.6, 10.0, 0.0, 0)])
+    up = jnp.asarray([1, 0, 1, 1, 1, 1])
+    q2, buf2, n_buf, n_shed = failover.drain_failed(
+        q, failover.empty_buffer(8), up, jnp.float32(5.0), LAT_L, fo)
+    assert float(n_buf) == 0.0 and float(n_shed) == 2.0
+    assert float(failover.in_buffer(buf2)) == 0.0
+    assert int(jnp.sum(engine.wait_valid(q2))) == 0  # both left the queue
+
+
+def test_drain_overflow_sheds_excess():
+    fo = FailoverConfig(retry_budget=3, buffer_cap=2)
+    q = _queues_with([(1, s, 500.0, 0.0, 0)
+                      for s in (0.5, 0.6, 0.7, 0.8)])
+    up = jnp.asarray([1, 0, 1, 1, 1, 1])
+    q2, buf2, n_buf, n_shed = failover.drain_failed(
+        q, failover.empty_buffer(fo.buffer_cap), up, jnp.float32(0.1),
+        LAT_L, fo)
+    assert float(n_buf) == 2.0 and float(n_shed) == 2.0
+    assert float(failover.in_buffer(buf2)) == 2.0
+
+
+def test_readmit_waits_out_backoff_then_lands_on_healthy_expert():
+    fo = FailoverConfig(retry_budget=3, backoff_base=1.0, buffer_cap=4,
+                        max_redispatch=2)
+    q = _queues_with([(1, 0.8, 500.0, 0.0, 0)])
+    up_all_but_1 = jnp.asarray([1, 0, 1, 1, 1, 1])
+    q, buf, n_buf, _ = failover.drain_failed(
+        q, failover.empty_buffer(4), up_all_but_1, jnp.float32(1.0),
+        LAT_L, fo)
+    assert float(n_buf) == 1.0
+    wc = jnp.full((N,), W, jnp.int32)
+    # t=1.5 < t_elig=2.0: backoff holds the retry in the buffer
+    q1, buf1, n_re, _ = failover.readmit(q, buf, up_all_but_1,
+                                         jnp.float32(1.5), wc, LAT_L, fo)
+    assert float(n_re) == 0.0 and float(failover.in_buffer(buf1)) == 1.0
+    # t=2.5 >= t_elig: re-admitted to a healthy expert, buffer cleared
+    q2, buf2, n_re2, _ = failover.readmit(q1, buf1, up_all_but_1,
+                                          jnp.float32(2.5), wc, LAT_L, fo)
+    assert float(n_re2) == 1.0 and float(failover.in_buffer(buf2)) == 0.0
+    landed = np.asarray(jnp.sum(engine.wait_valid(q2), -1))
+    assert landed[1] == 0 and landed.sum() == 1
+    # the re-admitted entry keeps its original t_arrive and carries retry=1
+    wi = np.asarray(q2["wait_i"])
+    n_tgt = int(np.argmax(landed))
+    from repro.env.engine_layout import WI_RETRY, WF_T_ARRIVE
+    assert wi[n_tgt, 0, WI_RETRY] == 1
+    assert float(q2["wait_f"][n_tgt, 0, WF_T_ARRIVE]) == 0.0
+
+
+def test_readmit_sheds_expired_entries():
+    fo = FailoverConfig(retry_budget=3, backoff_base=10.0, buffer_cap=4)
+    q = _queues_with([(1, 0.8, 10.0, 0.0, 0)])  # deadline = L*10 = 0.3
+    up = jnp.asarray([1, 0, 1, 1, 1, 1])
+    q, buf, _, _ = failover.drain_failed(q, failover.empty_buffer(4), up,
+                                         jnp.float32(0.1), LAT_L, fo)
+    wc = jnp.full((N,), W, jnp.int32)
+    _, buf2, n_re, n_shed = failover.readmit(q, buf, up, jnp.float32(1.0),
+                                             wc, LAT_L, fo)
+    assert float(n_re) == 0.0 and float(n_shed) == 1.0
+    assert float(failover.in_buffer(buf2)) == 0.0
+
+
+def test_occupancy_watermark_arms_admission_floor():
+    fo = FailoverConfig(shed_watermark=0.5, shed_pred_s=0.6)
+    q = engine.empty_queues(2, 2, 2)
+    rc = jnp.asarray([2, 2], jnp.int32)
+    wc = jnp.asarray([2, 2], jnp.int32)
+    assert float(failover.occupancy(q, rc, wc)) == 0.0
+    am = failover.admit_min_of(failover.occupancy(q, rc, wc), fo, 2)
+    assert float(am[0]) < -1e29  # disabled below the watermark
+    for i in range(4):
+        q, _ = engine.push_wait(q, jnp.asarray(i % 2), p=jnp.asarray(8),
+                                d_true=jnp.asarray(8),
+                                score=jnp.asarray(0.5),
+                                pred_s=jnp.asarray(0.5),
+                                pred_d=jnp.asarray(8.0),
+                                t=jnp.asarray(0.0), gate=jnp.bool_(True))
+    occ = failover.occupancy(q, rc, wc)
+    assert float(occ) == 0.5
+    am = failover.admit_min_of(occ, fo, 2)
+    np.testing.assert_allclose(np.asarray(am), 0.6)
+
+
+def test_failover_config_validation():
+    with pytest.raises(ValueError):
+        FailoverConfig(retry_budget=-1)
+    with pytest.raises(ValueError):
+        FailoverConfig(buffer_cap=0)
+    with pytest.raises(ValueError):
+        FailoverConfig(shed_watermark=1.5)
+    with pytest.raises(ValueError):
+        FailoverConfig(backoff_base=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Env-level lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _conservation_gap(cfg, steps=120, seed=5):
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(seed))
+
+    def body(carry, i):
+        state, k = carry
+        k, ka = jax.random.split(k)
+        a = jax.random.randint(ka, (), 0, cfg.n_experts + 1)
+        state, _, _ = env_lib.step(cfg, pool, state, a)
+        return (state, k), 0.0
+
+    (state, _), _ = jax.jit(lambda s: jax.lax.scan(
+        body, (s, jax.random.PRNGKey(seed + 1)), jnp.arange(steps)))(state)
+    s = state["stats"]
+    in_flight = (jnp.sum(engine.run_valid(state["queues"]))
+                 + jnp.sum(engine.wait_valid(state["queues"])))
+    if "retry_buf" in state:
+        in_flight = in_flight + failover.in_buffer(state["retry_buf"])
+    sinks = s["done"] + s["dropped"] + s["evicted"] + s.get("shed", 0.0)
+    return float(steps - (sinks + in_flight))
+
+
+@pytest.mark.parametrize("fo", [None, FailoverConfig(),
+                                FailoverConfig(shed_watermark=0.6)])
+def test_env_request_conservation_rolling_outage(fo):
+    """arrivals == completed + dropped + evicted + shed + in-flight,
+    through failures, recoveries and the retry lifecycle."""
+    cfg = env_lib.EnvConfig(scenario="rolling_outage", failover=fo)
+    assert _conservation_gap(cfg) == 0.0
+
+
+def test_env_failover_retries_through_outage():
+    """Through an outage with failover armed, stranded requests enter the
+    retry buffer and some are redispatched to healthy experts."""
+    cfg = env_lib.EnvConfig(scenario="rolling_outage",
+                            failover=FailoverConfig(backoff_base=0.01))
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(2))
+
+    def body(carry, i):
+        state, k = carry
+        k, ka = jax.random.split(k)
+        a = jax.random.randint(ka, (), 1, cfg.n_experts + 1)
+        state, _, _ = env_lib.step(cfg, pool, state, a)
+        return (state, k), 0.0
+
+    (state, _), _ = jax.jit(lambda s: jax.lax.scan(
+        body, (s, jax.random.PRNGKey(3)), jnp.arange(400)))(state)
+    m = env_lib.episode_metrics(state)
+    assert float(m["retried"]) > 0
+    assert float(m["redispatched"]) > 0
+
+
+def test_overload_shed_distinct_from_drop():
+    """A tiny overloaded fleet with the watermark armed sheds low-pred_s
+    arrivals through the distinct shed stat (not dropped)."""
+    fo = FailoverConfig(shed_watermark=0.25, shed_pred_s=2.0)  # shed all
+    cfg = env_lib.EnvConfig(n_experts=2, run_cap=2, wait_cap=2, failover=fo)
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(9))
+    for i in range(30):
+        state, _, _ = env_lib.step(cfg, pool, state, jnp.asarray((i % 2) + 1))
+    m = env_lib.episode_metrics(state)
+    assert float(m["shed"]) > 0
+
+
+def test_failover_aware_heuristics_shed_under_overload():
+    """SQF/QLL proactively drop sub-floor requests once occupancy crosses
+    the armed watermark (they mirror the env's shed gate)."""
+    from repro.core import routers
+    fo = FailoverConfig(shed_watermark=0.01, shed_pred_s=2.0)
+    cfg = env_lib.EnvConfig(n_experts=4, failover=fo)
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(1))
+    # put one request in a queue so occupancy > 0 >= tiny watermark
+    state, _, _ = env_lib.step(cfg, pool, state, jnp.asarray(1))
+    for make in (routers.shortest_queue, routers.quality_least_loaded):
+        pol = (make(cfg.n_experts, env_cfg=cfg)
+               if make is routers.shortest_queue else make(env_cfg=cfg))
+        a, _ = pol.act(pol.init_state(jax.random.PRNGKey(0)), state, None,
+                       jax.random.PRNGKey(0))
+        assert int(a) == 0  # every pred_s < 2.0 -> doomed -> drop
+    # without failover the same policies route normally
+    cfg2 = env_lib.EnvConfig(n_experts=4)
+    pol = routers.shortest_queue(cfg2.n_experts, env_cfg=cfg2)
+    a, _ = pol.act(pol.init_state(jax.random.PRNGKey(0)), state, None,
+                   jax.random.PRNGKey(0))
+    assert int(a) > 0
+
+
+def test_obs_retry_channel():
+    """The retry obs channel is zero without failover and reflects the
+    normalized retry count with it."""
+    from repro.core import features
+    assert features.REQ_FEATS == 7
+    cfg = env_lib.EnvConfig(n_experts=4,
+                            failover=FailoverConfig(retry_budget=2,
+                                                    backoff_base=0.0))
+    pool = env_lib.make_env_pool(cfg)
+    state = env_lib.reset(cfg, pool, jax.random.PRNGKey(0))
+    # push a retry=1 waiter onto expert 0 of the env's own queues
+    q, pushed = engine.push_wait(
+        state["queues"], jnp.asarray(0), p=jnp.asarray(64),
+        d_true=jnp.asarray(32), score=jnp.asarray(0.5),
+        pred_s=jnp.asarray(0.8), pred_d=jnp.asarray(500.0),
+        t=jnp.asarray(0.0), gate=jnp.bool_(True), retry=jnp.asarray(1))
+    assert bool(pushed)
+    state = {**state, "queues": q}
+    obs = features.build_obs(cfg, pool, state)
+    assert float(obs["wait"][0, 0, features.REQ_RETRY]) == pytest.approx(0.5)
+    # without failover every retry count is 0 -> channel identically zero
+    cfg0 = env_lib.EnvConfig(n_experts=4)
+    state0 = env_lib.reset(cfg0, pool, jax.random.PRNGKey(0))
+    obs0 = features.build_obs(cfg0, pool, state0)
+    assert float(jnp.sum(jnp.abs(obs0["run"][..., features.REQ_RETRY]))) == 0
+    assert float(jnp.sum(jnp.abs(obs0["wait"][..., features.REQ_RETRY]))) == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellites: crash-safe io, corrupt-checkpoint detection, stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_save_pytree_atomic_and_corruption_detected(tmp_path):
+    from repro.core import io
+    tree = {"a": jnp.arange(4.0), "b": [jnp.zeros((2, 2)), jnp.ones(3)]}
+    path = str(tmp_path / "ckpt.npz")
+    io.save_pytree(path, tree)
+    # no temp droppings left behind
+    assert os.listdir(tmp_path) == ["ckpt.npz"]
+    back = io.load_pytree(path)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(tree["a"]))
+    # truncated file -> clear error, not a pickle traceback
+    with open(path, "r+b") as f:
+        f.truncate(10)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        io.load_pytree(path)
+    with pytest.raises(FileNotFoundError):
+        io.load_pytree(str(tmp_path / "missing.npz"))
+
+
+def test_trainer_checkpoint_corruption_detected(tmp_path):
+    from repro.train import checkpoint
+    state = {"params": {"w": jnp.ones((2, 2))}, "step": jnp.asarray(7)}
+    ckpt_dir = str(tmp_path / "ck")
+    checkpoint.save(ckpt_dir, 7, state)
+    restored = checkpoint.restore(ckpt_dir, state)
+    assert int(restored["step"]) == 7
+    # truncate the shard -> clear error
+    shard = os.path.join(ckpt_dir, "step_00000007", "shard_0.npz")
+    with open(shard, "r+b") as f:
+        f.truncate(8)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        checkpoint.restore(ckpt_dir, state)
+    # corrupt manifest -> clear error
+    checkpoint.save(ckpt_dir, 8, state)
+    man = os.path.join(ckpt_dir, "step_00000008", "manifest.json")
+    with open(man, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="corrupt"):
+        checkpoint.restore(ckpt_dir, state)
+
+
+def test_straggler_detector_flags_training_iterations():
+    from repro.distributed.fault_tolerance import StragglerDetector
+    det = StragglerDetector(z_threshold=3.0, warmup=5)
+    flagged = [det.update(0.1) for _ in range(10)]
+    assert not any(flagged)
+    assert det.update(10.0)       # 100x the mean -> flagged
+    assert not det.update(0.1)    # stats not poisoned by the outlier
+
+
+def test_train_router_straggler_wiring():
+    """train_router with straggler_z set reports straggler_flags in the
+    history metrics (smoke-sized)."""
+    from repro.core import sac as sac_lib, training
+    cfg = env_lib.EnvConfig(n_experts=4)
+    sac_cfg = sac_lib.SACConfig(n_actions=cfg.n_experts + 1,
+                                flat_dim=cfg.n_experts * 3)
+    tc = training.TrainConfig(iterations=2, n_envs=2, collect_steps=2,
+                              updates_per_iter=1, batch_size=8,
+                              warmup_transitions=4, log_every=1,
+                              straggler_z=4.0)
+    _, history = training.train_router(cfg, sac_cfg, tc)
+    assert "straggler_flags" in history[-1]
+
+
+def test_router_ckpt_compat_checks_req_feats():
+    from repro.core import features, io
+    good = {"han": {"proj_expert": np.zeros((features.EXP_FEATS, 8)),
+                    "proj_req": np.zeros((features.REQ_FEATS, 8))}}
+    stale_req = {"han": {"proj_expert": np.zeros((features.EXP_FEATS, 8)),
+                         "proj_req": np.zeros((features.REQ_FEATS - 1, 8))}}
+    assert io.router_ckpt_compatible(good)
+    assert not io.router_ckpt_compatible(stale_req)
+    assert io.router_ckpt_compatible({"flat": 1})  # non-HAN baseline

@@ -287,11 +287,14 @@ def test_han_expert_permutation_equivariance(perm_seed):
     obs = {
         "expert": jax.random.normal(jax.random.fold_in(key, 1),
                                     (N, features.EXP_FEATS)),
-        "run": jax.random.normal(jax.random.fold_in(key, 2), (N, R, 6)),
-        "wait": jax.random.normal(jax.random.fold_in(key, 3), (N, W, 6)),
+        "run": jax.random.normal(jax.random.fold_in(key, 2),
+                                 (N, R, features.REQ_FEATS)),
+        "wait": jax.random.normal(jax.random.fold_in(key, 3),
+                                  (N, W, features.REQ_FEATS)),
         "run_mask": jax.random.bernoulli(jax.random.fold_in(key, 4), 0.6, (N, R)),
         "wait_mask": jax.random.bernoulli(jax.random.fold_in(key, 5), 0.4, (N, W)),
-        "arrived": jax.random.normal(jax.random.fold_in(key, 6), (6,)),
+        "arrived": jax.random.normal(jax.random.fold_in(key, 6),
+                                     (features.REQ_FEATS,)),
     }
     perm = rng.permutation(N)
     obs_p = dict(obs)
@@ -303,3 +306,153 @@ def test_han_expert_permutation_equivariance(perm_seed):
                                atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(np.asarray(exp1[perm]), np.asarray(exp2),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: request conservation under randomized failure/recovery mixes
+# ---------------------------------------------------------------------------
+
+_CN, _CR, _CW, _CT = 4, 3, 3, 64
+_CLAT = 0.030
+
+
+def _chaos_fo():
+    from repro.env.failover import FailoverConfig
+    return FailoverConfig(retry_budget=2, backoff_base=0.02, buffer_cap=8,
+                          max_redispatch=2, shed_watermark=0.8,
+                          shed_pred_s=0.5)
+
+
+import functools  # noqa: E402
+
+
+@functools.lru_cache(maxsize=None)
+def _chaos_driver(fo_on: bool):
+    """One jitted chaos driver per failover mode, shared by every
+    hypothesis example (the randomized up-table and arrival stream are
+    runtime arrays, so all examples reuse one compile).  Replicates the
+    env step boundary — (drain -> readmit -> gated admit -> advance) —
+    through the real ``repro.env.failover`` functions and returns the
+    conservation ledger."""
+    from repro.env import engine, failover, profiles
+
+    pool = profiles.make_pool(_CN)
+    caps_r = jnp.full((_CN,), _CR, jnp.int32)
+    caps_w = jnp.full((_CN,), _CW, jnp.int32)
+    fo = _chaos_fo()
+
+    def drive(stream):
+        def step(carry, x):
+            q, buf, clocks, t, done, dropped, shed = carry
+            up = x["up"]
+            admit_min = None
+            if fo_on:
+                q, buf, n_buf, s1 = failover.drain_failed(
+                    q, buf, up, t, _CLAT, fo)
+                q, buf, n_re, s2 = failover.readmit(
+                    q, buf, up, t, caps_w, _CLAT, fo)
+                shed = shed + s1 + s2
+                occ = failover.occupancy(q, caps_r, caps_w)
+                admit_min = failover.admit_min_of(occ, fo, _CN)
+            n = x["expert"]
+            gate = up[n]
+            arr_shed = jnp.float32(0.0)
+            if fo_on:  # mirror env._admit: shed takes precedence
+                is_shed = x["pred_s"][n] < admit_min[n]
+                arr_shed = is_shed.astype(jnp.float32)
+                gate = gate & ~is_shed
+            q, pushed = engine.push_wait(
+                q, n, p=x["p"], d_true=x["d_true"], score=x["score"],
+                pred_s=x["pred_s"][n], pred_d=x["pred_d"][n], t=t,
+                gate=gate)
+            dropped = dropped + (
+                (~pushed) & (arr_shed == 0)).astype(jnp.float32)
+            shed = shed + arr_shed
+            t_next = t + x["dt"]
+            q, clocks, acc = engine.advance_all(
+                pool, _CLAT, q, clocks, t_next, up=up,
+                admit_min=admit_min)
+            done = done + jnp.sum(acc["done"])
+            return (q, buf, clocks, t_next, done, dropped, shed), 0.0
+
+        init = (engine.empty_queues(_CN, _CR, _CW),
+                failover.empty_buffer(fo.buffer_cap),
+                jnp.zeros((_CN,), jnp.float32), jnp.float32(0.0),
+                jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+        (q, buf, _, _, done, dropped, shed), _ = jax.lax.scan(
+            step, init, stream)
+        in_flight = (jnp.sum(engine.run_valid(q))
+                     + jnp.sum(engine.wait_valid(q))
+                     + failover.in_buffer(buf))
+        return done, dropped, shed, in_flight
+
+    return jax.jit(drive)
+
+
+def _chaos_stream(seed: int, events):
+    """Arrival stream + per-step availability from a random ExpertDown
+    mix, expressed through the ``scenarios.spec`` event DSL (validated
+    via ScenarioSpec) and lowered to a per-step up-table at the exact
+    step times."""
+    from repro import scenarios
+
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    dt = np.asarray(jax.random.exponential(ks[0], (_CT,))) / 5.0
+    times = np.concatenate([[0.0], np.cumsum(dt)[:-1]])
+    spec = scenarios.ScenarioSpec(
+        name=f"_chaos_{seed}", horizon=float(times[-1] + 1.0),
+        events=tuple(scenarios.ExpertDown(expert=e, t0=t0, t1=t0 + d)
+                     for (e, t0, d) in events))
+    up = np.ones((_CT, _CN), bool)
+    for ev in spec.events:
+        e = ev.expert % _CN
+        up[(times >= ev.t0) & (times < ev.t1), e] = False
+    return {
+        "dt": jnp.asarray(dt, jnp.float32),
+        "up": jnp.asarray(up),
+        "expert": jax.random.randint(ks[1], (_CT,), 0, _CN),
+        "p": jax.random.randint(ks[2], (_CT,), 16, 512),
+        "d_true": jax.random.randint(ks[3], (_CT,), 8, 300),
+        "score": jax.random.uniform(ks[4], (_CT,), minval=0.2, maxval=0.95),
+        "pred_s": jax.random.uniform(ks[4], (_CT, _CN), minval=0.2,
+                                     maxval=0.95),
+        "pred_d": jax.random.uniform(ks[5], (_CT, _CN), minval=8.0,
+                                     maxval=300.0),
+    }
+
+
+import os  # noqa: E402
+
+_CHAOS_EXAMPLES = int(os.environ.get("REPRO_CHAOS_EXAMPLES", "0")) or None
+
+
+def _chaos_settings(f):
+    """Nightly CI cranks the chaos example count via REPRO_CHAOS_EXAMPLES
+    (the tier-1 default stays at the 'ci' profile's 20)."""
+    if _CHAOS_EXAMPLES:
+        return settings(max_examples=_CHAOS_EXAMPLES, deadline=None)(f)
+    return f
+
+
+@_chaos_settings
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    fo_on=st.booleans(),
+    events=st.lists(
+        st.tuples(st.integers(0, _CN - 1),          # expert
+                  st.floats(0.0, 10.0),             # t0
+                  st.floats(0.2, 6.0)),             # outage duration
+        min_size=0, max_size=6),
+)
+def test_chaos_request_conservation(seed, fo_on, events):
+    """arrivals == completed + dropped + shed + in-flight under random
+    ExpertDown/recovery mixes, with failover on and off (the failure-
+    aware lifecycle may move requests between queues and the retry
+    buffer but must never lose or duplicate one)."""
+    stream = _chaos_stream(seed, tuple(events))
+    done, dropped, shed, in_flight = _chaos_driver(bool(fo_on))(stream)
+    total = float(done) + float(dropped) + float(shed) + float(in_flight)
+    assert total == float(_CT), (
+        f"conservation violated: done={float(done)} dropped={float(dropped)}"
+        f" shed={float(shed)} in_flight={float(in_flight)} != {_CT}")
