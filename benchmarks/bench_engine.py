@@ -102,9 +102,19 @@ def backend_sweep(n_list=BIG_N, n_steps: int = 200,
     at N=512 the sharded/kernel rows are no slower than backend="xla".
     n_steps is part of the measurement (it sets how many experts ever see
     work), so `run.py --check` runs must keep the default to stay
-    comparable with the committed BENCH_engine.json baseline."""
+    comparable with the committed BENCH_engine.json baseline.  Rows that
+    execute the lockstep kernel (pallas; shard_map's per-shard body) carry
+    the RESOLVED interpret flag and auto-tuned block_n so a baseline
+    recorded in interpret mode is never diffed against real-TPU numbers
+    (common.check_against_baseline enforces this via the file-level
+    ``engine_interpret`` field)."""
+    from repro.kernels.lockstep_advance import ops as lockstep_ops
+
+    interp = lockstep_ops.resolve_interpret(None)
     for n_experts in n_list:
         pool = profiles.make_pool(n_experts)
+        block_n = lockstep_ops.default_block_n(n_experts, interp)
+        kflags = f";interpret={int(interp)};block_n={block_n}"
         secs = {}
         for backend in backends:
             adv = functools.partial(engine.advance_all, backend=backend)
@@ -115,7 +125,8 @@ def backend_sweep(n_list=BIG_N, n_steps: int = 200,
                 f"{prefix}/N{n_experts}/{backend}",
                 secs[backend] / n_steps * 1e6,
                 f"steps_per_s={n_steps / secs[backend]:.1f};"
-                f"done={float(done):.0f}")
+                f"done={float(done):.0f}"
+                + (kflags if backend != "xla" else ""))
         if "xla" in secs:
             for backend in (b for b in backends if b != "xla"):
                 common.emit(f"{prefix}/N{n_experts}/{backend}_vs_xla", 0.0,

@@ -3,7 +3,9 @@ plus the beyond-paper fleet-scale sweeps:
 
   * `advance_all` engine backends (xla / pallas / shard_map) at
     N ∈ {64, 256, 512, 1024}, the edge-cluster scales of EdgeShard /
-    Yu et al. (2025), and
+    Yu et al. (2025), plus the `fleet_sweep` large-fleet rows at
+    N ∈ {1024, 4096} (the folded-layout lockstep kernel; N=4096 is
+    pallas-only and nightly-sized), and
   * router TRAINING throughput (`train_sweep`): full jitted
     collect+insert+SAC-update iterations at N ∈ {64, 256} through the
     HAN obs path — padded layout at N=64 as the reference, segment
@@ -23,9 +25,11 @@ for N=6 and heuristics cover the sweep — pass --train-per-n for the full
 paper protocol).
 
 ``run(quick=True)`` is the tier-1 CI shape (the committed
-BENCH_scaling.json is recorded with it): fig11 + ragged rows + a 2-iter
-train_sweep, skipping the backend_sweep duplicate that the engine suite
-already gates."""
+BENCH_scaling.json is recorded with it): fig11 + ragged rows + the
+N=1024 fleet rows + a 2-iter train_sweep, skipping the backend_sweep
+duplicate that the engine suite already gates (the committed baseline
+additionally carries the nightly-recorded N=4096 fleet row; absent
+fresh rows are simply not compared)."""
 from __future__ import annotations
 
 import functools
@@ -92,6 +96,26 @@ def ragged_sweep(n_experts: int = 256, n_steps: int = 150) -> None:
             f"peak_obs_intermediate={peak}")
 
 
+def fleet_sweep(quick: bool = False, n_steps: int = 60) -> None:
+    """Large-fleet ``advance_all`` throughput: N=1024 (xla vs pallas) and
+    N=4096 (pallas only — the XLA while-loop path takes minutes to compile
+    at that width and the kernel is the production path).  Short scan
+    (n_steps=60): these rows measure per-step advance throughput at
+    fleet scale, not drain behaviour.  ``quick`` (the tier-1 CI shape /
+    committed BENCH_scaling.json) keeps N=1024; the N=4096 row is
+    recorded by the nightly lane (tests/test_fleet_scale.py ``slow``
+    marker) and by full ``benchmarks.run`` invocations."""
+    from benchmarks import bench_engine
+
+    bench_engine.backend_sweep(n_list=(1024,), n_steps=n_steps,
+                               prefix="fleet/advance_all",
+                               backends=("xla", "pallas"))
+    if not quick:
+        bench_engine.backend_sweep(n_list=(4096,), n_steps=n_steps,
+                                   prefix="fleet/advance_all",
+                                   backends=("pallas",))
+
+
 def train_sweep(n_list=TRAIN_N, iters: int = 3) -> None:
     """Training steps/sec at fleet-scale N: one row per (N, obs layout),
     timing `iters` post-warmup jitted iterations (collect 2x2 transitions,
@@ -150,6 +174,7 @@ def run(n_steps: int = 3000, train_per_n: bool = False,
             us = m["wall_s"] / n_steps * 1e6
             common.emit(f"fig11_N{n}/{pol.name}", us, common.fmt_metrics(m))
     ragged_sweep()
+    fleet_sweep(quick=quick)
     if quick:
         # tier-1 CI shape (committed BENCH_scaling.json): the engine suite
         # already gates backend timings, so skip the backend_sweep

@@ -52,10 +52,17 @@ def drain_results() -> List[dict]:
 def write_json(suite: str, out_dir: str = ".", rows=None) -> str:
     """Write rows (default: those emitted since the last drain) to
     BENCH_<suite>.json."""
+    from repro.kernels.lockstep_advance import ops as lockstep_ops
+
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
     payload = {
         "suite": suite,
         "backend": jax.default_backend(),
+        # resolved kernel execution mode for this run: interpret-mode and
+        # real-TPU timings are never comparable, so the flag rides in
+        # every baseline file and check_against_baseline refuses to diff
+        # across it (same contract as the backend field)
+        "engine_interpret": lockstep_ops.resolve_interpret(None),
         "jax_version": jax.__version__,
         "results": drain_results() if rows is None else rows,
     }
@@ -91,6 +98,8 @@ def check_against_baseline(suite: str, rows, *, tol: float = 1.3,
                     f"cannot run. {regen}"]
         print(f"# [check] no baseline {path}; skipping", file=sys.stderr)
         return []
+    from repro.kernels.lockstep_advance import ops as lockstep_ops
+
     with open(path) as f:
         payload = json.load(f)
     if payload.get("backend") != jax.default_backend():
@@ -98,6 +107,16 @@ def check_against_baseline(suite: str, rows, *, tol: float = 1.3,
                f"{payload.get('backend')!r} but this run uses "
                f"{jax.default_backend()!r}; cross-platform timings are "
                f"not comparable")
+        if require:
+            return [f"{suite}: {msg} — the perf gate cannot run. {regen}"]
+        print(f"# [check] {msg} — skipping", file=sys.stderr)
+        return []
+    cur_interp = lockstep_ops.resolve_interpret(None)
+    base_interp = payload.get("engine_interpret", cur_interp)
+    if base_interp != cur_interp:
+        msg = (f"{path} was recorded with engine_interpret={base_interp} "
+               f"but this run resolves {cur_interp}; interpret-mode and "
+               f"real-TPU kernel timings are not comparable")
         if require:
             return [f"{suite}: {msg} — the perf gate cannot run. {regen}"]
         print(f"# [check] {msg} — skipping", file=sys.stderr)

@@ -1,15 +1,31 @@
-"""Roofline analysis from dry-run artifacts (deliverable g).
+"""Roofline analysis — two feeds:
 
-Reads experiments/dryrun/**.json (produced by repro.launch.dryrun), derives
-the three roofline terms per (arch x shape x mesh):
+1. ``run()``: dry-run artifacts (deliverable g).  Reads
+   experiments/dryrun/**.json (produced by repro.launch.dryrun), derives
+   the three roofline terms per (arch x shape x mesh):
 
-  compute    = HLO_FLOPs_per_dev / peak_FLOPs
-  memory     = HLO_bytes_per_dev / HBM_bw
-  collective = collective_wire_bytes_per_dev / ICI_bw
+     compute    = HLO_FLOPs_per_dev / peak_FLOPs
+     memory     = HLO_bytes_per_dev / HBM_bw
+     collective = collective_wire_bytes_per_dev / ICI_bw
 
-plus MODEL_FLOPS (6·N·D train / 2·N_active·D per serve token), the
-useful-compute ratio, the dominant term, and a one-line "what would move
-it" note.  Emits CSV + writes a markdown table for EXPERIMENTS.md.
+   plus MODEL_FLOPS (6·N·D train / 2·N_active·D per serve token), the
+   useful-compute ratio, the dominant term, and a one-line "what would
+   move it" note.  Emits CSV + writes a markdown table for
+   EXPERIMENTS.md.
+
+2. ``engine_run()``: the lockstep engine itself.  Compiles the
+   bench_engine inject+advance scan per (N, backend), feeds the
+   compiled HLO through ``repro.launch.hlo_analysis`` (loop-aware: the
+   scan body is multiplied by its trip count) and reports per-STEP
+   bytes / MXU / VPU flops / collective wire bytes next to the measured
+   steps/sec, with the dominant roofline term on the modelled TPU
+   (``launch.mesh`` constants).  The advance kernel does no matmuls, so
+   compute time is VPU-dominated (elementwise_flops / VPU_FLOPS_F32) —
+   on the modelled chip the engine sits against the HBM roof, which is
+   exactly why the PR 7 lane-folded retile (contiguous (8,128) f32
+   tiles instead of 5-wide ragged rows) is the right optimisation.
+   These rows carry real ``us_per_call`` timings and gate in CI
+   (``BENCH_roofline.json``; scripts/ci.sh ``roofline`` suite).
 """
 from __future__ import annotations
 
@@ -22,7 +38,9 @@ from typing import Optional
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import SHAPES, get_config  # noqa: E402
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, VPU_FLOPS_F32,
+)
 
 
 def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
@@ -108,5 +126,65 @@ def run(dryrun_dir: str = "experiments/dryrun", write_md: str = "") -> list:
     return rows
 
 
+ENGINE_N_QUICK = (256,)
+ENGINE_N_FULL = (256, 1024, 4096)
+
+
+def engine_run(quick: bool = False, n_steps: int = 60,
+               backends=("xla", "pallas")) -> list:
+    """Engine-mode roofline: HLO cost totals of the compiled
+    ``advance_all`` scan, normalised per engine step, next to measured
+    throughput.  N=4096 runs pallas-only (the XLA while-loop path takes
+    minutes to compile at that width)."""
+    import functools
+
+    from benchmarks import bench_engine, common
+    from repro.env import engine, profiles
+    from repro.kernels.lockstep_advance import ops as lockstep_ops
+    from repro.launch import hlo_analysis
+
+    interp = lockstep_ops.resolve_interpret(None)
+    rows = []
+    for n_experts in (ENGINE_N_QUICK if quick else ENGINE_N_FULL):
+        pool = profiles.make_pool(n_experts)
+        for backend in backends:
+            if backend == "xla" and n_experts > 1024:
+                continue
+            adv = functools.partial(engine.advance_all, backend=backend)
+            runner = bench_engine._make_runner(
+                pool, n_experts, n_steps, engine.empty_queues,
+                bench_engine._inject_packed, adv)
+            compiled = runner.lower().compile()
+            totals = hlo_analysis.analyze(compiled.as_text())
+            secs, (_, done) = bench_engine._time(runner)
+            # per-step normalisation: the scan body dominates, so totals
+            # divide cleanly by the trip count
+            mxu = totals.flops / n_steps
+            vpu = totals.elementwise_flops / n_steps
+            bts = totals.memory_bytes / n_steps
+            wire = totals.collective_wire_bytes / n_steps
+            terms = {"compute": mxu / PEAK_FLOPS_BF16 + vpu / VPU_FLOPS_F32,
+                     "memory": bts / HBM_BW,
+                     "collective": wire / ICI_BW}
+            dominant = max(terms, key=terms.get)
+            row = {
+                "n_experts": n_experts, "backend": backend,
+                "steps_per_s": n_steps / secs, "bytes_per_step": bts,
+                "mxu_flops_per_step": mxu, "vpu_flops_per_step": vpu,
+                "wire_bytes_per_step": wire, "dominant": dominant,
+                "interpret": interp,
+            }
+            rows.append(row)
+            common.emit(
+                f"roofline/engine/N{n_experts}/{backend}",
+                secs / n_steps * 1e6,
+                f"steps_per_s={n_steps / secs:.1f};done={float(done):.0f};"
+                f"bytes_per_step={bts:.0f};mxu_per_step={mxu:.0f};"
+                f"vpu_per_step={vpu:.0f};wire_per_step={wire:.0f};"
+                f"dom={dominant};interpret={int(interp)}")
+    return rows
+
+
 if __name__ == "__main__":
     run(write_md="experiments/roofline_table.md")
+    engine_run()

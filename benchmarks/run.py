@@ -21,6 +21,8 @@ suite).  Sections:
   engine       advance_all microbenchmark (lockstep vs seed)  bench_engine
   predictors   score/length bucket predictor accuracy         bench_predictors
   roofline     dry-run roofline terms (reads experiments/)    roofline
+               + engine-mode HLO roofline of advance_all
+                 (timed rows; gated via BENCH_roofline.json)
 
 CI & benchmarks
 ---------------
@@ -28,8 +30,8 @@ Two lanes run in ``.github/workflows/ci.yml``:
 
   * tier-1 (push/PR, jax matrix: pinned minimum 0.4.35 + latest):
     ``scripts/ci.sh`` = fast tests (``-m "not slow"``) + the engine,
-    routing, latency, scaling, rates, deadlines, scenarios and faults
-    perf gates, i.e. ``--quick
+    routing, latency, scaling, rates, deadlines, scenarios, faults and
+    roofline perf gates, i.e. ``--quick
     --only <suite> --check --require-baseline --tol 1.8`` with
     ``REPRO_BENCH_RL=0`` (heuristic rows only — no router quick-training
     on shared runners; ``--quick`` also keeps the scaling suite
@@ -50,7 +52,8 @@ Regenerating baselines (after an intentional perf change, on an idle
 box)::
 
     PYTHONPATH=src python -m benchmarks.run --quick --only engine --json
-    for s in routing latency scaling rates deadlines scenarios faults; do
+    for s in routing latency scaling rates deadlines scenarios faults \
+             roofline; do
         REPRO_BENCH_RL=0 PYTHONPATH=src python -m benchmarks.run --quick \
             --only $s --json
     done
@@ -148,8 +151,14 @@ def main() -> None:
                 lambda: bench_predictors.run(steps=300 if args.quick else 600))
     if want("roofline"):
         from benchmarks import roofline
-        section("roofline",
-                lambda: roofline.run(write_md="experiments/roofline_table.md"))
+
+        def roofline_section():
+            # dry-run rows (derived-only; prints, needs experiments/dryrun)
+            roofline.run(write_md="experiments/roofline_table.md")
+            # engine-mode rows (timed; the gated BENCH_roofline.json set)
+            roofline.engine_run(quick=args.quick)
+
+        section("roofline", roofline_section)
     print(f"# total wall time: {time.time() - t0:.1f}s", file=sys.stderr)
     if args.check:
         if failures:

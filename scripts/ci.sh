@@ -19,5 +19,5 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # nightly full bench covers the RL rows).
 REPRO_BENCH_RL=0 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --quick \
-    --only engine,routing,latency,scaling,rates,deadlines,scenarios,faults \
+    --only engine,routing,latency,scaling,rates,deadlines,scenarios,faults,roofline \
     --check --require-baseline --tol 1.8

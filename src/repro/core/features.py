@@ -79,11 +79,16 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
     # failover, where every retry count is 0)
     fo = getattr(cfg, "failover", None)
     retry_norm = float(max(fo.retry_budget, 1)) if fo is not None else 1.0
+    # tokens -> memory-fraction as ONE constant-folded ratio: `x * mpt /
+    # cap` leaves XLA free to reassociate per compilation (batch-1 vs
+    # batch-n vmaps round differently by 1 ulp), which breaks the
+    # data-axis collect's bit-identity guarantee; `x * const` has a
+    # single IEEE rounding everywhere
+    mem_frac = pool.mem_per_token / pool.mem_capacity
 
     # --- running request nodes (N, R, REQ_FEATS) ---
     d_cur = run_d_cur.astype(jnp.float32)
-    run_mem = (run_p + run_d_cur).astype(jnp.float32) * \
-        pool.mem_per_token[:, None] / pool.mem_capacity[:, None]
+    run_mem = (run_p + run_d_cur).astype(jnp.float32) * mem_frac[:, None]
     l_cur = (t - layout.run_t_arrive(q)) / jnp.maximum(d_cur, 1.0)
     run_f = jnp.stack([
         run_p.astype(jnp.float32) / mp,
@@ -111,7 +116,7 @@ def build_obs(cfg, pool, state: dict, *, fmt: str = "padded") -> dict:
 
     # --- expert nodes (N, EXP_FEATS) ---
     tok = jnp.where(run_valid, run_p + run_d_cur, 0)
-    e_n = jnp.sum(tok, -1).astype(jnp.float32) * pool.mem_per_token / pool.mem_capacity
+    e_n = jnp.sum(tok, -1).astype(jnp.float32) * mem_frac
     n_exp = run_valid.shape[0]
     run_caps = getattr(cfg, "run_caps", None)
     wait_caps = getattr(cfg, "wait_caps", None)

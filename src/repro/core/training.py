@@ -18,6 +18,18 @@ iteration is bit-identical to the single-device path — asserted by
 ``tests/test_replay_sharded.py`` (shard logic) and
 ``tests/test_multidevice.py::test_sharded_training_iteration_multidevice``
 (real 8-device mesh).
+
+On a 2-D ``("data", "expert")`` mesh (``launch.mesh.make_train_mesh(
+data=k)``) the collect batch additionally shards over ``data``: each
+data-row of devices steps only its ``n_envs / k`` envs, then the
+transition batch is all-gathered (tiled, participant order = env order)
+before the buffer insert.  Bit-identity with the 1-D path needs one
+care: ``sac.act`` consumes a PRNG key whose gumbel draw covers the whole
+(n_envs, N) logits tensor, so actions are computed from the FULL
+gathered observations on every data shard (identical everywhere) and
+each shard slices out its local envs' actions for stepping.  The buffer
+insert then sees the identical full batch on every data shard, keeping
+the expert-sharded buffer replicated-consistent across ``data``.
 """
 from __future__ import annotations
 
@@ -119,8 +131,15 @@ def init_train_state(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         rep = NamedSharding(mesh, PartitionSpec())
         put_rep = lambda t: jax.tree.map(
             lambda x: jax.device_put(jnp.asarray(x), rep), t)
-        params, opt_state, env_states = (put_rep(params), put_rep(opt_state),
-                                         put_rep(env_states))
+        params, opt_state = put_rep(params), put_rep(opt_state)
+        env_sh = rep
+        if sharding.DATA in mesh.shape:
+            # 2-D training mesh: envs live sharded over the data axis
+            # (dim 0 = env axis; data_shards validates divisibility)
+            sharding.data_shards(mesh, tc.n_envs)
+            env_sh = NamedSharding(mesh, PartitionSpec(sharding.DATA))
+        env_states = jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), env_sh), env_states)
     return params, opt, opt_state, env_states, buf
 
 
@@ -136,7 +155,9 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
     ``mesh=None`` runs single-device (the reference path); with a mesh the
     same body runs under ``shard_map`` with the buffer capacity-sharded
     over the ``expert`` axis (see module docstring) and only the replay
-    insert/sample bodies differ.
+    insert/sample bodies differ.  A 2-D ``("data", "expert")`` mesh
+    additionally shards env stepping over ``data`` (collect-batch
+    sharding; bit-identical — see module docstring).
     """
     reward_fn = make_reward_fn(env_cfg, pool, tc)
 
@@ -146,28 +167,39 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         return _maybe_zero_preds(tc, o)
 
     def iteration_body(params, opt_state, env_states, buf, key, step, *,
-                       insert_fn, sample_fn):
+                       insert_fn, sample_fn, gather_fn=None, slice_fn=None):
+        # Data-axis parametrization (both identity on the plain and 1-D
+        # mesh paths, so those stay textually the same computation):
+        # ``gather_fn`` all-gathers env-axis tensors to the full batch,
+        # ``slice_fn`` cuts a data shard's local envs back out.  Actions
+        # are always computed from FULL observations so the PRNG draw in
+        # sac.act covers the same logits tensor on every shard.
+        gather = gather_fn if gather_fn is not None else (lambda t: t)
+        take = slice_fn if slice_fn is not None else (lambda t: t)
+
         def collect(carry, _):
             # obs rides in the carry so build_obs runs ONCE per env step
-            # (the seed recomputed next_obs as obs on the following step).
+            # (the seed recomputed next_obs as obs on the following step);
+            # it is the FULL gathered batch, env_states stay local.
             env_states, obs, buf, key = carry
             key, k_act = jax.random.split(key)
             actions = sac_lib.act(params, sac_cfg, obs, k_act)
+            a_loc = take(actions)
 
             def one(s, a):
                 s2, r, info = env_lib.step(env_cfg, pool, s, a)
                 return s2, (r, info)
 
-            env_states2, (rewards, infos) = jax.vmap(one)(env_states, actions)
-            rew = jax.vmap(lambda s, a, i: reward_fn(s, a, i))(
-                env_states, actions, infos)
-            next_obs = obs_of(env_states2)
+            env_states2, (rewards, infos) = jax.vmap(one)(env_states, a_loc)
+            rew = gather(jax.vmap(lambda s, a, i: reward_fn(s, a, i))(
+                env_states, a_loc, infos))
+            next_obs = gather(obs_of(env_states2))
             buf = insert_fn(buf, obs, actions, rew,
                             jnp.ones_like(rew), next_obs)
             return (env_states2, next_obs, buf, key), jnp.mean(rew)
 
         (env_states, _, buf, key), rews = jax.lax.scan(
-            collect, (env_states, obs_of(env_states), buf, key), None,
+            collect, (env_states, gather(obs_of(env_states)), buf, key), None,
             length=tc.collect_steps)
 
         def update(carry, _):
@@ -229,6 +261,10 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
         raise ValueError(f"training mesh has no '{ax}' axis: {mesh}")
     n_shards = sharding.replay_shards(mesh, tc.buffer_capacity)
     buf_specs = sharding.replay_specs()
+    # 2-D ("data", "expert") mesh: collect-batch sharding over data
+    # (see module docstring); 1-D meshes leave dax None -> identity fns.
+    dax = sharding.DATA if sharding.DATA in mesh.shape else None
+    n_data = sharding.data_shards(mesh, tc.n_envs)
 
     def body(params, opt_state, env_states, buf, key, step):
         shard_idx = jax.lax.axis_index(ax)
@@ -240,14 +276,29 @@ def make_iteration(env_cfg: env_lib.EnvConfig, sac_cfg: sac_lib.SACConfig,
                 b, k, batch_size, shard_idx=shard_idx, n_shards=n_shards)
             return jax.lax.psum(contrib, ax)
 
+        gather_fn = slice_fn = None
+        if dax is not None:
+            per = tc.n_envs // n_data
+
+            def gather_fn(t):
+                return jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, dax, tiled=True), t)
+
+            def slice_fn(t):
+                i0 = jax.lax.axis_index(dax) * per
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i0, per, 0), t)
+
         return iteration_body(params, opt_state, env_states, buf, key, step,
-                              insert_fn=insert_fn, sample_fn=sample_fn)
+                              insert_fn=insert_fn, sample_fn=sample_fn,
+                              gather_fn=gather_fn, slice_fn=slice_fn)
 
     rep = P()
+    env_spec = P(dax) if dax is not None else rep
     sharded = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(rep, rep, rep, buf_specs, rep, rep),
-        out_specs=(rep, rep, rep, buf_specs, rep, rep),
+        in_specs=(rep, rep, env_spec, buf_specs, rep, rep),
+        out_specs=(rep, rep, env_spec, buf_specs, rep, rep),
         check_vma=False)
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
 

@@ -25,6 +25,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 FSDP = "fsdp"   # data(+pod) sharding of params
 TP = "tp"       # model axis
 EXPERT = "expert"  # scheduling-engine expert axis (edge-expert fleet)
+DATA = "data"   # collect-batch (env) axis of the 2-D training mesh
+# (``launch.mesh.make_train_mesh(data=k)``; distinct from the model-mesh
+# "data" FSDP axis above — a train mesh never carries both meanings)
 
 # name -> logical spec of the trailing dims (longest match wins)
 _PARAM_RULES = {
@@ -160,6 +163,22 @@ def replay_shards(mesh: Optional[Mesh], capacity: int) -> int:
         raise ValueError(
             f"buffer_capacity={capacity} not divisible by mesh axis "
             f"'{EXPERT}'={n}")
+    return n
+
+
+def data_shards(mesh: Optional[Mesh], n_envs: int) -> int:
+    """Number of collect-batch shards on this mesh: the size of the
+    ``data`` axis of a 2-D ``("data", "expert")`` training mesh
+    (``launch.mesh.make_train_mesh(data=k)``), 1 when the axis is absent.
+    Raises when the env count does not divide evenly — silent padding
+    would break the gathered insert batch's bit-identity with the
+    single-device iteration (``core.training.make_iteration``)."""
+    if mesh is None or DATA not in mesh.shape:
+        return 1
+    n = int(mesh.shape[DATA])
+    if n_envs % n != 0:
+        raise ValueError(
+            f"n_envs={n_envs} not divisible by mesh axis '{DATA}'={n}")
     return n
 
 

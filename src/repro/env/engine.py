@@ -33,10 +33,13 @@ Backends
   * ``"pallas"``    — the fused ``lockstep_advance`` kernel, gridded over
     expert blocks (interpret mode off-TPU).
   * ``"shard_map"`` — the expert axis is split across the devices of an
-    ``("expert",)`` mesh (``launch.mesh.make_expert_mesh``); each device
-    runs ``advance_shard`` on its rows and only the per-expert completion
-    accumulators are all-gathered back to every device.  Queue tensors and
-    clocks stay device-local between calls.
+    ``("expert",)`` mesh (``launch.mesh.make_expert_mesh``, multi-host
+    aware); each device runs the fused lockstep kernel on its rows
+    (``shard_body="pallas"``, the default — ``shard_body="xla"`` keeps
+    the plain ``advance_shard`` loop as a bit-identical escape hatch)
+    and only the per-expert completion accumulators are all-gathered back
+    to every device.  Queue tensors and clocks stay device-local between
+    calls.
 
 All backends are bit-identical to ``engine_ref`` (the seed vmap engine);
 asserted in ``tests/test_engine_equiv.py``.
@@ -155,6 +158,8 @@ from repro.env.engine_layout import (  # noqa: F401  (re-exported layout API)
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
     WI_VALID, WI_P, WI_D_TRUE, WI_RETRY, WAIT_I_CH,
     WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE, WAIT_F_CH,
+    PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
+    PAR_UP, PAR_ADMIT_MIN, PAR_CH, PAR_CAP_FREE,
     empty_queues, push_wait, mem_used, slot_valid,
     run_valid, run_p, run_d_true, run_d_cur, run_retry, run_score,
     run_pred_s, run_pred_d, run_t_arrive, run_t_admit,
@@ -183,7 +188,16 @@ def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None,
     axis, so they shard identically); a ``k_scale`` straggler multiplier
     is folded straight into ``k1``/``k2``; ``admit_min`` (N,) f32 is the
     overload-shedding admission floor (waiters with ``pred_s`` below it
-    are deferred; ``-INF``/absent disables the floor)."""
+    are deferred; ``-INF``/absent disables the floor).
+
+    Also builds the kernel's dense (N, PAR_CH) float32 parameter pack
+    under ``"par"`` (``engine_layout.PAR_*`` channel order) ONCE per
+    window, so ``ops.lockstep_advance`` never restacks it in the hot
+    loop: the pool channels (k1/k2/mem) are loop-invariant and only the
+    scenario-varying channels (caps, up, admit_min) change between
+    windows.  Absent caps use the ``PAR_CAP_FREE`` sentinel, which keeps
+    every slot-mask all-True — bit-identical to explicit full-width
+    caps."""
     k1, k2 = pool.k1, pool.k2
     if k_scale is not None:
         scale = jnp.asarray(k_scale, jnp.float32)
@@ -199,6 +213,22 @@ def pool_params(pool: ExpertPool, run_caps=None, wait_caps=None,
         params["up"] = jnp.asarray(up, jnp.bool_)
     if admit_min is not None:
         params["admit_min"] = jnp.asarray(admit_min, jnp.float32)
+    chans = [None] * PAR_CH
+    chans[PAR_K1], chans[PAR_K2] = k1, k2
+    chans[PAR_MEM_CAP] = pool.mem_capacity
+    chans[PAR_MPT] = pool.mem_per_token
+    free = jnp.full_like(jnp.asarray(k1, jnp.float32), PAR_CAP_FREE)
+    chans[PAR_RUN_CAP] = (params["run_cap"].astype(jnp.float32)
+                          if run_caps is not None else free)
+    chans[PAR_WAIT_CAP] = (params["wait_cap"].astype(jnp.float32)
+                           if wait_caps is not None else free)
+    chans[PAR_UP] = (params["up"].astype(jnp.float32)
+                     if up is not None else jnp.ones_like(free))
+    chans[PAR_ADMIT_MIN] = (params["admit_min"]
+                            if admit_min is not None
+                            else jnp.full_like(free, -1e30))
+    params["par"] = jnp.stack(
+        [jnp.asarray(c, jnp.float32) for c in chans], axis=-1)
     return params
 
 
@@ -360,11 +390,16 @@ def advance_shard(params: dict, latency_L: float, queues: dict,
 
 def _advance_shard_map(params: dict, latency_L: float, queues: dict,
                        clocks: jax.Array, t_next: jax.Array, *,
-                       admit_order: str, mesh) -> Tuple[dict, jax.Array, dict]:
+                       admit_order: str, mesh, shard_body: str = "pallas",
+                       block_n=None) -> Tuple[dict, jax.Array, dict]:
     """Expert-axis sharded advance: each device of the mesh's ``expert``
-    axis runs ``advance_shard`` on its (N/devices)-row shard; only the
+    axis runs the fused lockstep kernel (``shard_body="pallas"``, the
+    default — interpret mode off-TPU) or the plain ``advance_shard`` XLA
+    loop (``shard_body="xla"``) on its (N/devices)-row shard; only the
     per-expert completion accumulators cross devices (one tiled
-    all-gather), queue tensors and clocks stay device-local."""
+    all-gather), queue tensors and clocks stay device-local.  Both bodies
+    are bit-identical, so the escape hatch exists for lowering inspection
+    and debugging, not semantics."""
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
@@ -376,12 +411,21 @@ def _advance_shard_map(params: dict, latency_L: float, queues: dict,
     if n % n_shards != 0:
         raise ValueError(
             f"n_experts={n} not divisible by mesh axis '{axis}'={n_shards}")
+    if shard_body not in ("pallas", "xla"):
+        raise ValueError(f"unknown shard_body {shard_body!r}")
 
     e_spec = lambda x: sharding.expert_spec(mesh, n, x.ndim)
 
     def body(params, queues, clocks, t_next):
-        q, c, acc = advance_shard(params, latency_L, queues, clocks, t_next,
-                                  admit_order=admit_order)
+        if shard_body == "pallas":
+            from repro.kernels.lockstep_advance.ops import lockstep_advance
+            q, c, acc = lockstep_advance(params, queues, clocks, t_next,
+                                         latency_L=float(latency_L),
+                                         admit_order=admit_order,
+                                         block_n=block_n)
+        else:
+            q, c, acc = advance_shard(params, latency_L, queues, clocks,
+                                      t_next, admit_order=admit_order)
         acc = jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis, tiled=True), acc)
         return q, c, acc
@@ -401,7 +445,8 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
                 clocks: jax.Array, t_next: jax.Array, *,
                 backend: str = "xla", admit_order: str = "fifo",
                 run_caps=None, wait_caps=None, up=None, k_scale=None,
-                admit_min=None, mesh=None, block_n: int = 128,
+                admit_min=None, mesh=None, block_n=None,
+                shard_body: str = "pallas",
                 ) -> Tuple[dict, jax.Array, dict]:
     """Advance all N experts to ``t_next`` on the selected backend (see the
     module docstring).  ``run_caps``/``wait_caps`` (N,) bound each
@@ -411,8 +456,11 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
     scaling); ``admit_min`` (N,) f32 defers waiters whose ``pred_s`` is
     below the floor (overload shedding, ``repro.env.failover``; None = no
     floor); ``mesh`` (shard_map only) defaults to a 1-D ``("expert",)``
-    mesh over all local devices; ``block_n`` (pallas only) is the kernel's
-    expert block size.
+    mesh over all visible devices (multi-host aware, process-major order);
+    ``block_n`` is the kernel's expert block size (None auto-tunes per
+    backend, ``ops.default_block_n``); ``shard_body`` selects the
+    per-shard body under shard_map — the fused Pallas kernel (default)
+    or the plain XLA loop (bit-identical escape hatch).
 
     Returns (queues, clocks, acc) with acc entries shaped (N,).
     """
@@ -435,6 +483,7 @@ def advance_all(pool: ExpertPool, latency_L: float, queues: dict,
             from repro.launch.mesh import make_expert_mesh
             mesh = make_expert_mesh()
         return _advance_shard_map(params, latency_L, queues, clocks, t_next,
-                                  admit_order=admit_order, mesh=mesh)
+                                  admit_order=admit_order, mesh=mesh,
+                                  shard_body=shard_body, block_n=block_n)
     raise ValueError(f"unknown engine backend {backend!r}; "
                      f"expected one of {BACKENDS}")

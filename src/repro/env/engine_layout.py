@@ -70,6 +70,47 @@ WAIT_I_CH = 4
 WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE = 0, 1, 2, 3
 WAIT_F_CH = 4
 
+# Channel order of the dense per-expert parameter pack consumed by the
+# lockstep kernel (``kernels.lockstep_advance``): pool scalars, ragged
+# capacity vectors, scenario availability and the overload-shedding
+# admission floor travel as ONE (N, PAR_CH) float32 operand.  Caps are
+# small ints and ``up`` is 0/1, both exactly representable in float32;
+# ``engine.pool_params`` builds the pack once per window so the kernel's
+# hot loop never restacks it.
+(PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
+ PAR_UP, PAR_ADMIT_MIN) = range(8)
+PAR_CH = 8
+# Capacity sentinel for capacity-free packs: 2**24 is exactly
+# representable in float32 and far above any packed slot width, so
+# ``iota < PAR_CAP_FREE`` is all-True exactly like ``iota < width`` —
+# pool_params can build the pack without knowing the queue widths while
+# staying bit-identical to explicit full-width caps.
+PAR_CAP_FREE = float(2 ** 24)
+
+
+def fold_channels(x: jax.Array) -> jax.Array:
+    """(N, S, CH) -> (N, S*CH): merge the slot and channel dims row-major.
+
+    The folded form is the lockstep kernel's operand layout: a queue
+    tensor's natural trailing dim is CH (4 or 5), which on TPU occupies
+    one 128-wide vector lane register per slot at <5% utilisation — the
+    f32 minimum tile is (8 sublanes, 128 lanes) and the last dim always
+    maps to lanes.  Folding to (N, S*CH) widens the trailing dim so
+    blocks tile the lane axis densely.  Being a row-major reshape it is a
+    pure metadata change (bit-identical, zero-copy under XLA); channel c
+    of slot s lives at column ``s * CH + c``, and only the kernel's
+    entry/exit reshapes ever see the folded form — everything else keeps
+    the 3-D accessors above.
+    """
+    n, s, ch = x.shape
+    return jnp.reshape(x, (n, s * ch))
+
+
+def unfold_channels(x: jax.Array, ch: int) -> jax.Array:
+    """Inverse of :func:`fold_channels`: (N, S*CH) -> (N, S, CH)."""
+    n, sc = x.shape
+    return jnp.reshape(x, (n, sc // ch, ch))
+
 
 def empty_queues(n: int, r: int, w: int) -> dict:
     return {

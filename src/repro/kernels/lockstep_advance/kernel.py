@@ -13,6 +13,15 @@ less masked work than the global loop.
 
 TPU portability notes (vs the jnp body in ``engine.advance_shard``):
 
+  * queue operands arrive FOLDED — (N, R*CH) / (N, W*CH) via
+    ``engine_layout.fold_channels`` — so the trailing (lane) dim is
+    R*CH/W*CH wide instead of the raw channel count (4–5), which would
+    waste 123+ of the 128 lanes in every f32 vector register (the TPU
+    minimum f32 tile is 8 sublanes x 128 lanes and the last dim always
+    maps to lanes).  The kernel body unfolds to (B, S, CH) views at
+    entry and folds back at exit; both are row-major reshapes, i.e. pure
+    layout metadata, so the retile is bit-identical by construction.
+    See ``README.md`` next to this module;
   * ``argmin`` / ``take_along_axis`` are replaced with broadcasted-iota
     min-index selection and one-hot masked reductions (no gathers), with
     the same first-index tie-breaking;
@@ -21,18 +30,23 @@ TPU portability notes (vs the jnp body in ``engine.advance_shard``):
   * clocks ride as (N, 1) so every operand is >= 2-D;
   * the per-expert pool scalars, the ragged capacity vectors AND the
     scenario availability mask travel in one dense (block_n, PAR_CH)
-    float32 operand (``PAR_*`` channel order below) — run_cap/wait_cap
-    are small ints and up is 0/1, exactly representable in float32, and
-    a uniform always-up fleet (caps == packed widths, up all-ones) makes
-    every mask all-True, reproducing the capacity-free scenario-free
-    kernel bit-for-bit.  A down expert (up == 0) admits nothing and
-    decodes nothing: its only permitted action is idle, matching the
-    engine's XLA body.  Straggler ``k_scale`` factors arrive pre-folded
-    into k1/k2 (``engine.pool_params``), so they need no channel.
+    float32 operand (``engine_layout.PAR_*`` channel order, built once
+    per window by ``engine.pool_params``) — run_cap/wait_cap are small
+    ints and up is 0/1, exactly representable in float32, and a uniform
+    always-up fleet (caps == packed widths or the ``PAR_CAP_FREE``
+    sentinel, up all-ones) makes every mask all-True, reproducing the
+    capacity-free scenario-free kernel bit-for-bit.  A down expert
+    (up == 0) admits nothing and decodes nothing: its only permitted
+    action is idle, matching the engine's XLA body.  Straggler
+    ``k_scale`` factors arrive pre-folded into k1/k2
+    (``engine.pool_params``), so they need no channel.
 
 Off-TPU the kernel runs in interpret mode (see ``ops.lockstep_advance``,
-which also carries the ``use_pallas`` escape hatch and the ``ref.py``
-oracle = the engine's XLA loop).
+which also carries the ``use_pallas`` escape hatch, per-backend
+``block_n`` auto-tuning and the ``ref.py`` oracle = the engine's XLA
+loop).  The sharded engine backend dispatches here per shard
+(``engine._advance_shard_map``), so multi-device fleets inherit the
+fused body too.
 """
 from __future__ import annotations
 
@@ -45,23 +59,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.env.engine import admit_sort_key
 from repro.env.engine_layout import (
-    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RI_RETRY,
+    RI_VALID, RI_P, RI_D_TRUE, RI_D_CUR, RI_RETRY, RUN_I_CH,
     RF_SCORE, RF_PRED_S, RF_PRED_D, RF_T_ARRIVE, RF_T_ADMIT, RUN_F_CH,
-    WI_VALID, WI_P, WI_D_TRUE, WI_RETRY,
-    WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE,
+    WI_VALID, WI_P, WI_D_TRUE, WI_RETRY, WAIT_I_CH,
+    WF_SCORE, WF_PRED_S, WF_PRED_D, WF_T_ARRIVE, WAIT_F_CH,
+    PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
+    PAR_UP, PAR_ADMIT_MIN, PAR_CH,
 )
 
 # python float (not a jnp scalar: pallas_call forbids captured constants)
 INF = 1e30
 N_ACC = 6  # phi, lat, score, wait, done, viol  (ops.ACC_KEYS order)
-
-# channel order of the packed per-expert parameter operand (ops.py builds
-# it; caps are stored as float32 and re-cast to int32 in the kernel, the
-# availability mask as 0.0/1.0 and re-cast to bool; admit_min is the
-# overload-shedding admission floor, -INF when disabled)
-(PAR_K1, PAR_K2, PAR_MEM_CAP, PAR_MPT, PAR_RUN_CAP, PAR_WAIT_CAP,
- PAR_UP, PAR_ADMIT_MIN) = range(8)
-PAR_CH = 8
 
 
 def _first_index(mask: jax.Array, iota: jax.Array, size: int) -> jax.Array:
@@ -81,10 +89,15 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
                      run_i_out, run_f_out, wvalid_out, clk_out, acc_out,
                      *, latency_L: float, admit_order: str):
     t_next = tn_ref[0, 0]
-    run_i0 = run_i_ref[...]                                # (B, R, CI) int32
-    run_f0 = run_f_ref[...]                                # (B, R, CF) f32
-    wait_i0 = wait_i_ref[...]                              # (B, W, CI) int32
-    wait_f0 = wait_f_ref[...]                              # (B, W, CF) f32
+    # Blocks arrive lane-folded (B, S*CH); unfold to (B, S, CH) views for
+    # the channel-indexed body — a row-major reshape, pure layout.
+    bn = clk_ref.shape[0]
+    r_cap = run_i_ref.shape[1] // RUN_I_CH
+    w_cap = wait_i_ref.shape[1] // WAIT_I_CH
+    run_i0 = run_i_ref[...].reshape(bn, r_cap, RUN_I_CH)   # (B, R, CI) int32
+    run_f0 = run_f_ref[...].reshape(bn, r_cap, RUN_F_CH)   # (B, R, CF) f32
+    wait_i0 = wait_i_ref[...].reshape(bn, w_cap, WAIT_I_CH)  # (B, W) int32
+    wait_f0 = wait_f_ref[...].reshape(bn, w_cap, WAIT_F_CH)  # (B, W) f32
     par = par_ref[...]                                     # (B, PAR_CH) f32
     clocks0 = clk_ref[...][:, 0]                           # (B,)
     k1, k2 = par[:, PAR_K1], par[:, PAR_K2]
@@ -94,8 +107,6 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
     upv = par[:, PAR_UP] > 0.5                             # (B,) availability
     admit_min = par[:, PAR_ADMIT_MIN]                      # (B,) shed floor
 
-    bn, r_cap = run_i0.shape[0], run_i0.shape[1]
-    w_cap = wait_i0.shape[1]
     run_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, r_cap), 1)
     wait_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, w_cap), 1)
     run_ok = run_iota < run_capv[:, None]                  # (B, R) live slots
@@ -202,8 +213,8 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
         cond, body, (run_i0, run_f0, wvalid0, clocks0, acc0,
                      active_mask(run_i0, wvalid0, clocks0)))
 
-    run_i_out[...] = run_i
-    run_f_out[...] = run_f
+    run_i_out[...] = run_i.reshape(bn, r_cap * RUN_I_CH)   # re-fold
+    run_f_out[...] = run_f.reshape(bn, r_cap * RUN_F_CH)
     wvalid_out[...] = wvalidb.astype(jnp.int32)
     clk_out[...] = jnp.maximum(clocks, t_next)[:, None]  # idle jump forward
     acc_out[...] = acc
@@ -212,40 +223,42 @@ def _lockstep_kernel(tn_ref, run_i_ref, run_f_ref, wait_i_ref, wait_f_ref,
 def lockstep_advance_call(run_i, run_f, wait_i, wait_f, par, clocks, t_next,
                           *, latency_L: float, admit_order: str,
                           block_n: int, interpret: bool = False):
-    """Raw pallas_call over expert blocks.
+    """Raw pallas_call over expert blocks — FOLDED operand layout.
 
-    run_i (N, R, CI) i32 | run_f (N, R, CF) f32 | wait_i (N, W, CI) i32 |
-    wait_f (N, W, CF) f32 | par (N, PAR_CH) f32 [k1, k2, cap, mpt,
-    run_cap, wait_cap, up, admit_min] | clocks (N, 1) f32 | t_next
-    (1, 1) f32.  N must divide by block_n.
+    run_i (N, R*CI) i32 | run_f (N, R*CF) f32 | wait_i (N, W*WCI) i32 |
+    wait_f (N, W*WCF) f32 (``engine_layout.fold_channels`` of the packed
+    queues — every operand is 2-D with a wide trailing lane dim) |
+    par (N, PAR_CH) f32 [k1, k2, cap, mpt, run_cap, wait_cap, up,
+    admit_min] | clocks (N, 1) f32 | t_next (1, 1) f32.  N must divide
+    by block_n.
 
-    Returns (run_i, run_f, wait_valid (N, W) i32, clocks (N, 1),
-    acc (N, 6) f32 in ``ops.ACC_KEYS`` order).
+    Returns (run_i (N, R*CI), run_f (N, R*CF), wait_valid (N, W) i32,
+    clocks (N, 1), acc (N, 6) f32 in ``ops.ACC_KEYS`` order).
     """
-    n, r_cap, ci = run_i.shape
-    w_cap = wait_i.shape[1]
-    cf = run_f.shape[2]
-    wci, wcf = wait_i.shape[2], wait_f.shape[2]
+    n, rci = run_i.shape
+    assert rci % RUN_I_CH == 0, (rci, RUN_I_CH)
+    r_cap = rci // RUN_I_CH
+    w_cap = wait_i.shape[1] // WAIT_I_CH
     assert n % block_n == 0, (n, block_n)
 
     kernel = functools.partial(_lockstep_kernel, latency_L=latency_L,
                                admit_order=admit_order)
-    b3 = lambda rr, ch: pl.BlockSpec((block_n, rr, ch), lambda i: (i, 0, 0))
     b2 = lambda ch: pl.BlockSpec((block_n, ch), lambda i: (i, 0))
     return pl.pallas_call(
         kernel,
         grid=(n // block_n,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
-            b3(r_cap, ci), b3(r_cap, cf), b3(w_cap, wci), b3(w_cap, wcf),
+            b2(rci), b2(run_f.shape[1]),
+            b2(wait_i.shape[1]), b2(wait_f.shape[1]),
             b2(PAR_CH), b2(1),
         ],
         out_specs=[
-            b3(r_cap, ci), b3(r_cap, cf), b2(w_cap), b2(1), b2(N_ACC),
+            b2(rci), b2(run_f.shape[1]), b2(w_cap), b2(1), b2(N_ACC),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, r_cap, ci), jnp.int32),
-            jax.ShapeDtypeStruct((n, r_cap, cf), jnp.float32),
+            jax.ShapeDtypeStruct((n, r_cap * RUN_I_CH), jnp.int32),
+            jax.ShapeDtypeStruct((n, r_cap * RUN_F_CH), jnp.float32),
             jax.ShapeDtypeStruct((n, w_cap), jnp.int32),
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((n, N_ACC), jnp.float32),

@@ -3,31 +3,74 @@ backend).
 
 Dispatch mirrors the repo's kernel idiom: ``use_pallas=False`` falls back
 to ``ref.lockstep_advance_ref`` (the engine's XLA while-loop), and off-TPU
-the kernel runs in interpret mode.  N is padded to a multiple of
-``block_n`` with inert experts (no work, zero params — including zero
-run/wait capacity) that the lockstep loop never touches; their rows are
-dropped before returning.
+the kernel runs in interpret mode (``resolve_interpret``).  N is padded
+to a multiple of ``block_n`` with inert experts (no work, zero params —
+including zero run/wait capacity) that the lockstep loop never touches;
+their rows are dropped before returning.
 
-``params`` may carry optional per-expert ``run_cap``/``wait_cap`` (N,)
-capacity vectors (ragged heterogeneous fleets), an ``up`` (N,) bool
-availability mask (scenario fleets) and an ``admit_min`` (N,) f32
-overload-shedding admission floor (failover fleets); they ride in the
-packed (N, PAR_CH) float32 parameter operand (``kernel.PAR_*`` channel
-order) and default to the packed slot widths (every slot live) / all-up /
-no floor (-INF).  Padded inert experts get a zero admit_min, which is
-harmless: they own zero capacity and no waiters.
+The kernel consumes the queues lane-FOLDED (``engine_layout.
+fold_channels``: (N, S, CH) -> (N, S*CH)); the fold/unfold happens here
+at the call boundary as pure row-major reshapes, so callers keep the 3-D
+packed layout and the retile is invisible outside this module.
+
+``params`` normally carries the prebuilt (N, PAR_CH) float32 parameter
+pack under ``"par"`` (``engine.pool_params`` stacks it once per window —
+the hot loop never restacks; ``engine_layout.PAR_*`` channel order).
+Hand-built param dicts without ``"par"`` fall back to stacking here from
+the optional per-expert ``run_cap``/``wait_cap`` (N,) capacity vectors
+(ragged heterogeneous fleets), ``up`` (N,) bool availability mask
+(scenario fleets) and ``admit_min`` (N,) f32 overload-shedding admission
+floor (failover fleets); absent entries default to the ``PAR_CAP_FREE``
+sentinel (every slot live) / all-up / no floor (-INF).  Padded inert
+experts get a zero admit_min, which is harmless: they own zero capacity
+and no waiters.
+
+``block_n=None`` auto-tunes the expert block per backend
+(``default_block_n``): interpret mode wants small blocks (the
+"kernel" is plain traced XLA, so blocks only bound while-loop trip
+counts), real TPU wants blocks big enough to fill the 8x128 f32 tile
+grid from VMEM.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.env.engine_layout import (
+    PAR_CAP_FREE, RUN_I_CH, RUN_F_CH, WI_VALID,
+    fold_channels, unfold_channels,
+)
 from repro.kernels.lockstep_advance.kernel import lockstep_advance_call
 
 ACC_KEYS = ("phi", "lat", "score", "wait", "done", "viol")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Kernel execution mode: an explicit flag wins; ``None`` auto-selects
+    interpret everywhere except a real TPU backend.  Exposed so the
+    benchmark harness can stamp the resolved flag into every emitted row
+    — interpret-mode timings must never be compared against real-TPU
+    baselines (``benchmarks/common.check_against_baseline``)."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
+
+
+def default_block_n(n: int, interpret: bool) -> int:
+    """Per-backend ``block_n`` auto-tune (used when callers pass ``None``).
+
+    Interpret mode lowers the pallas_call to plain traced XLA, so the
+    block size only bounds per-block while-loop trip counts — 128 keeps
+    the historical behaviour (and the committed CPU baselines).  On a
+    real TPU each grid step should cover many (8, 128) f32 tiles of the
+    folded operands to amortise grid overhead, so blocks grow to 512
+    experts (= 64 sublane groups) before spilling VMEM at the packed
+    widths used here.
+    """
+    return min(n, 128 if interpret else 512)
 
 
 @functools.partial(jax.jit, static_argnames=("latency_L", "admit_order",
@@ -35,9 +78,11 @@ ACC_KEYS = ("phi", "lat", "score", "wait", "done", "viol")
                                              "interpret"))
 def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
                      t_next: jax.Array, *, latency_L: float,
-                     admit_order: str = "fifo", block_n: int = 128,
+                     admit_order: str = "fifo",
+                     block_n: Optional[int] = None,
                      use_pallas: bool = True,
-                     interpret: bool = None) -> Tuple[dict, jax.Array, dict]:
+                     interpret: Optional[bool] = None,
+                     ) -> Tuple[dict, jax.Array, dict]:
     """Same contract as ``engine.advance_shard`` (and bit-identical to it):
     (params, queues, clocks, t_next) -> (queues, clocks, acc)."""
     if not use_pallas:
@@ -45,30 +90,40 @@ def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
         return lockstep_advance_ref(params, queues, clocks, t_next,
                                     latency_L=latency_L,
                                     admit_order=admit_order)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
 
     n = clocks.shape[0]
+    if block_n is None:
+        block_n = default_block_n(n, interpret)
     bn = min(block_n, n)
     pad = (-n) % bn
-    r_width = queues["run_i"].shape[1]
-    w_width = queues["wait_i"].shape[1]
-    run_cap = params.get("run_cap", jnp.full((n,), r_width, jnp.int32))
-    wait_cap = params.get("wait_cap", jnp.full((n,), w_width, jnp.int32))
-    up = params.get("up", jnp.ones((n,), jnp.bool_))
-    admit_min = params.get("admit_min", jnp.full((n,), -1e30, jnp.float32))
-    par = jnp.stack([params["k1"], params["k2"], params["mem_capacity"],
-                     params["mem_per_token"],
-                     run_cap.astype(jnp.float32),
-                     wait_cap.astype(jnp.float32),
-                     up.astype(jnp.float32),
-                     admit_min.astype(jnp.float32)],
-                    axis=-1).astype(jnp.float32)
-    run_i, run_f = queues["run_i"], queues["run_f"]
-    wait_i, wait_f = queues["wait_i"], queues["wait_f"]
+    par = params.get("par")
+    if par is None:
+        # Hand-built params (tests, ref harnesses) — pack here.  The
+        # PAR_CAP_FREE sentinel is bit-identical to full-width caps:
+        # every slot-iota comparison stays all-True.
+        run_cap = params.get("run_cap",
+                             jnp.full((n,), PAR_CAP_FREE, jnp.float32))
+        wait_cap = params.get("wait_cap",
+                              jnp.full((n,), PAR_CAP_FREE, jnp.float32))
+        up = params.get("up", jnp.ones((n,), jnp.bool_))
+        admit_min = params.get("admit_min",
+                               jnp.full((n,), -1e30, jnp.float32))
+        par = jnp.stack([params["k1"], params["k2"], params["mem_capacity"],
+                         params["mem_per_token"],
+                         run_cap.astype(jnp.float32),
+                         wait_cap.astype(jnp.float32),
+                         up.astype(jnp.float32),
+                         admit_min.astype(jnp.float32)],
+                        axis=-1)
+    par = par.astype(jnp.float32)
+    run_i = fold_channels(queues["run_i"])
+    run_f = fold_channels(queues["run_f"])
+    wait_i = fold_channels(queues["wait_i"])
+    wait_f = fold_channels(queues["wait_f"])
     clk = clocks[:, None].astype(jnp.float32)
     if pad:
-        grow = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        grow = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
         run_i, run_f, wait_i, wait_f, par, clk = map(
             grow, (run_i, run_f, wait_i, wait_f, par, clk))
 
@@ -78,10 +133,10 @@ def lockstep_advance(params: dict, queues: dict, clocks: jax.Array,
         latency_L=latency_L, admit_order=admit_order, block_n=bn,
         interpret=interpret)
 
-    from repro.env.engine_layout import WI_VALID
     cut = lambda x: x[:n] if pad else x
     queues = {
-        "run_i": cut(run_i), "run_f": cut(run_f),
+        "run_i": unfold_channels(cut(run_i), RUN_I_CH),
+        "run_f": unfold_channels(cut(run_f), RUN_F_CH),
         "wait_i": queues["wait_i"].at[..., WI_VALID].set(cut(wvalid)),
         "wait_f": queues["wait_f"],
     }

@@ -1,0 +1,45 @@
+"""Nightly fleet-scale lane: the N=4096 engine rows (bench_scaling
+``fleet_sweep`` full shape + the engine-mode roofline at max width).
+
+These take minutes in interpret mode, so they ride the ``slow`` marker —
+the nightly workflow runs ``pytest -m slow``; tier-1 skips them.  The
+committed BENCH_scaling.json / BENCH_roofline.json baselines carry the
+manually-recorded N=4096 rows; this test keeps the path itself from
+rotting (compile + run + emit) and sanity-checks the emitted metrics.
+"""
+import pytest
+
+pytestmark = pytest.mark.slow  # multi-minute; scripts/ci.sh skips these
+
+
+def test_fleet_4096_rows():
+    from benchmarks import bench_scaling, common
+
+    common.drain_results()
+    bench_scaling.fleet_sweep(quick=False, n_steps=20)
+    rows = {r["name"]: r for r in common.drain_results()}
+    row = rows["fleet/advance_all/N4096/pallas"]
+    assert row["us_per_call"] > 0.0
+    assert row["derived"]["steps_per_s"] > 0.0
+    assert row["derived"]["done"] > 0.0
+    # flags stamped so baselines can't silently cross interpret modes
+    assert row["derived"]["interpret"] in (0.0, 1.0)
+    assert row["derived"]["block_n"] >= 1
+    # the quick (CI-gated) N=1024 rows come out of the same sweep
+    assert "fleet/advance_all/N1024/xla" in rows
+    assert "fleet/advance_all/N1024/pallas" in rows
+
+
+def test_roofline_engine_4096():
+    from benchmarks import common, roofline
+
+    common.drain_results()
+    rows = roofline.engine_run(quick=False, n_steps=20,
+                               backends=("pallas",))
+    common.drain_results()
+    big = [r for r in rows if r["n_experts"] == 4096]
+    assert len(big) == 1
+    r = big[0]
+    assert r["steps_per_s"] > 0.0
+    assert r["bytes_per_step"] > 0.0
+    assert r["dominant"] in ("compute", "memory", "collective")

@@ -309,6 +309,82 @@ def test_han_expert_permutation_equivariance(perm_seed):
 
 
 # ---------------------------------------------------------------------------
+# Kernel padding: folded-layout block padding is invisible at any N
+# ---------------------------------------------------------------------------
+
+# N=5 with block_n=4 forces a 3-expert pad block (5 -> 8), so every drive
+# exercises inert padded experts alongside live ragged ones.
+_PAD_N, _PAD_R, _PAD_W, _PAD_STEPS, _PAD_BLOCK = 5, 4, 3, 30, 4
+
+
+import functools  # noqa: E402
+
+
+@functools.lru_cache(maxsize=None)
+def _pad_driver(backend: str):
+    """One jitted driver per engine backend (caps / admission floors /
+    the stream are runtime arrays, so all hypothesis examples share one
+    compile).  The pallas drive pins ``block_n=4`` so N=5 always pads."""
+    from repro.env import engine, profiles
+
+    pool = profiles.make_pool(_PAD_N)
+    block_n = _PAD_BLOCK if backend == "pallas" else None
+
+    def drive(run_caps, wait_caps, admit_min, stream):
+        def step(carry, x):
+            q, clocks, t = carry
+            q, _ = engine.push_wait(
+                q, x["expert"], p=x["p"], d_true=x["d"], score=x["score"],
+                pred_s=x["score"], pred_d=x["d"].astype(jnp.float32), t=t,
+                wait_cap=wait_caps)
+            t_next = t + x["dt"]
+            q, clocks, acc = engine.advance_all(
+                pool, 0.030, q, clocks, t_next,
+                run_caps=run_caps, wait_caps=wait_caps,
+                admit_min=admit_min, backend=backend, block_n=block_n)
+            return (q, clocks, t_next), acc
+
+        init = (engine.empty_queues(_PAD_N, _PAD_R, _PAD_W),
+                jnp.zeros((_PAD_N,), jnp.float32), jnp.float32(0.0))
+        (q, clocks, _), accs = jax.lax.scan(step, init, stream)
+        return q, clocks, accs
+
+    return jax.jit(drive)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    run_caps=st.tuples(*[st.integers(1, _PAD_R)] * _PAD_N),
+    wait_caps=st.tuples(*[st.integers(1, _PAD_W)] * _PAD_N),
+    admit_min=st.tuples(*[st.sampled_from((-1e30, 0.4, 0.7))] * _PAD_N),
+)
+def test_kernel_padding_bit_identical(seed, run_caps, wait_caps, admit_min):
+    """Folded-layout padding contract: with N=5 and block_n=4 the pallas
+    backend pads a 3-expert inert block (zero caps, zero params) — the
+    drive must stay BIT-identical to the XLA backend for every ragged
+    run/wait capacity mix and per-expert ``admit_min`` shedding floor
+    (the failover admission path), i.e. the padded experts never leak
+    work, completions or clock movement into the live rows."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    stream = {
+        "dt": jax.random.exponential(ks[0], (_PAD_STEPS,)) / 5.0,
+        "expert": jax.random.randint(ks[1], (_PAD_STEPS,), 0, _PAD_N),
+        "p": jax.random.randint(ks[2], (_PAD_STEPS,), 16, 512),
+        "d": jax.random.randint(ks[3], (_PAD_STEPS,), 8, 300),
+        "score": jax.random.uniform(ks[4], (_PAD_STEPS,), minval=0.2,
+                                    maxval=0.95),
+    }
+    args = (jnp.asarray(run_caps, jnp.int32),
+            jnp.asarray(wait_caps, jnp.int32),
+            jnp.asarray(admit_min, jnp.float32), stream)
+    out_k = _pad_driver("pallas")(*args)
+    out_x = _pad_driver("xla")(*args)
+    for a, b in zip(jax.tree.leaves(out_k), jax.tree.leaves(out_x)):
+        assert bool(jnp.all(a == b))
+
+
+# ---------------------------------------------------------------------------
 # Chaos: request conservation under randomized failure/recovery mixes
 # ---------------------------------------------------------------------------
 
@@ -321,9 +397,6 @@ def _chaos_fo():
     return FailoverConfig(retry_budget=2, backoff_base=0.02, buffer_cap=8,
                           max_redispatch=2, shed_watermark=0.8,
                           shed_pred_s=0.5)
-
-
-import functools  # noqa: E402
 
 
 @functools.lru_cache(maxsize=None)
